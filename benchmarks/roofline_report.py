@@ -1,0 +1,53 @@
+"""Render the §Roofline table from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--variant baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from typing import List
+
+
+def load(variant: str = "baseline", outdir: str = "artifacts/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(f"{outdir}/*__{variant}.json")):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def table(rows: List[dict], mesh: str = "single") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL_FLOPS | useful | roofline | note |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                       f"| — | — | SKIP: {r['reason'][:60]} |")
+            continue
+        ro = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.4f} | "
+            f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+            f"{ro['bottleneck'].replace('_s', '')} | "
+            f"{ro['model_flops']:.3g} | {ro['useful_ratio']:.2f} | "
+            f"{ro['roofline_fraction']:.3f} | "
+            f"temp {r['memory']['temp_bytes'] / 1e9:.1f}GB |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--outdir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    rows = load(args.variant, args.outdir)
+    print(table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

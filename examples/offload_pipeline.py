@@ -1,0 +1,34 @@
+"""The paper's technique applied to a training loop: the miniature
+train-loop block-program is planned (batch upload hoisted, weights and
+optimizer state device-resident with noupdate, loss fetched once at the
+end), the generated schedule is printed, and both plans are executed with
+instrumented transfers.
+
+    PYTHONPATH=src python examples/offload_pipeline.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import emit, execute, naive_plan, plan
+from repro.optim import plan_step_program
+
+
+def main():
+    prog = plan_step_program(n_steps=6)
+    optimized = plan(prog)
+    print(emit(optimized))
+
+    _, s_opt = execute(optimized)
+    _, s_nv = execute(naive_plan(prog))
+    print(f"\noptimized: {s_opt.h2d_transfers} uploads / "
+          f"{s_opt.d2h_transfers} downloads")
+    print(f"naive:     {s_nv.h2d_transfers} uploads / "
+          f"{s_nv.d2h_transfers} downloads")
+    print(f"\nthe residency win: weights + optimizer state stay on device "
+          f"across all 6 steps ({s_nv.h2d_transfers - s_opt.h2d_transfers} "
+          f"uploads elided)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro — OMP2HMPP (Saà-Garriga et al., 2014) as a JAX/TPU framework.
+
+The paper's transfer-directive optimization (advancedload/delegatestore/
+noupdate/group/async+sync placement from static dataflow analysis) is
+implemented in ``repro.core`` and integrated as a first-class feature of a
+multi-pod training/serving stack (``repro.models``, ``repro.distributed``,
+``repro.optim``, ``repro.checkpoint``, ``repro.launch``).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Mesh-agnostic checkpointing with async saves."""
+from .manager import CheckpointManager
+__all__ = ["CheckpointManager"]

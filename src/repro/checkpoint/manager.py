@@ -1,0 +1,149 @@
+"""Mesh-agnostic checkpointing with async (delegatestore-style) saves.
+
+Format: one directory per step containing
+    manifest.json           — tree structure, shapes, dtypes, step metadata
+    <leaf-id>.npy           — one file per LOGICAL array (device-assembled)
+
+Saving is the paper's ``delegatestore`` at system scale: the device→host
+copy is issued immediately (cheap, overlapped by JAX's async dispatch), the
+disk write runs on a background thread, and ``wait()`` is the
+``synchronize`` barrier placed as late as possible (right before the next
+save or shutdown).  Because arrays are stored as full logical values, a
+checkpoint written on one mesh restores onto ANY mesh/sharding — this is
+the elastic-rescale path (tested in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._pending: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, extra: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        """delegatestore: device→host now (async dispatch), disk write on a
+        background thread."""
+        self.wait()   # previous save must land first (ordering)
+        host_leaves = [(k, np.asarray(v)) for k, v in
+                       _flatten_with_paths(tree)]
+        treedef = jax.tree_util.tree_structure(tree)
+        manifest = {
+            "step": step,
+            "extra": extra or {},
+            "treedef": str(treedef),
+            "leaves": [
+                {"key": k, "file": f"{i:05d}.npy",
+                 "shape": list(v.shape), "dtype": str(v.dtype)}
+                for i, (k, v) in enumerate(host_leaves)
+            ],
+        }
+
+        def write():
+            tmp = self.dir / f".tmp_step_{step:010d}"
+            final = self.dir / f"step_{step:010d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            for i, (_, v) in enumerate(host_leaves):
+                np.save(tmp / f"{i:05d}.npy", v)
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)      # atomic publish
+            self._gc()
+
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        self._pending = t
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        """synchronize: barrier for the in-flight save."""
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree: Any,
+                shardings: Optional[Any] = None
+                ) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``target_tree`` with optional
+        shardings — the mesh/sharding may differ from save time (elastic
+        rescale: the logical arrays are re-distributed on load)."""
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        by_key = {e["key"]: e for e in manifest["leaves"]}
+        flat_t = _flatten_with_paths(target_tree)
+        treedef = jax.tree_util.tree_structure(target_tree)
+        sh_leaves = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+            if shardings is not None else [None] * len(flat_t))
+        leaves = []
+        for (key, tgt), sh in zip(flat_t, sh_leaves):
+            ent = by_key.get(key)
+            if ent is None:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = np.load(d / ent["file"])
+            want = tuple(getattr(tgt, "shape", arr.shape))
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"leaf {key!r}: checkpoint shape {arr.shape} != "
+                    f"target {want}")
+            leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.device_put(arr))
+        return (jax.tree_util.tree_unflatten(treedef, leaves),
+                manifest["extra"])
+
+    def restore_latest(self, target_tree: Any,
+                       shardings: Optional[Any] = None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = self.restore(step, target_tree, shardings)
+        return step, tree, extra

@@ -1,0 +1,19 @@
+"""Config registry: one module per assigned architecture (+ polybench)."""
+from .base import (ArchConfig, ShapeSpec, SHAPES, get_config, list_archs,
+                   param_count, active_param_count, reduced, register)
+
+from . import qwen2_5_14b, internlm2_20b, command_r_35b, nemotron4_15b, \
+    qwen3_moe_30b_a3b, arctic_480b, recurrentgemma_2b, musicgen_large, \
+    chameleon_34b, rwkv6_3b
+from .polybench import POLYBENCH_PROBLEMS
+
+ALL_ARCHS = (
+    qwen2_5_14b.CONFIG, internlm2_20b.CONFIG, command_r_35b.CONFIG,
+    nemotron4_15b.CONFIG, qwen3_moe_30b_a3b.CONFIG, arctic_480b.CONFIG,
+    recurrentgemma_2b.CONFIG, musicgen_large.CONFIG, chameleon_34b.CONFIG,
+    rwkv6_3b.CONFIG,
+)
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "get_config", "list_archs",
+           "param_count", "active_param_count", "reduced", "register",
+           "ALL_ARCHS", "POLYBENCH_PROBLEMS"]

@@ -1,0 +1,30 @@
+"""OMP2HMPP-style offload planning for JAX — the paper's core contribution.
+
+Public API:
+    Program          — block/loop program builder (the "pragma'd source")
+    analyze          — jaxpr def/use + liveness analysis (paper §2)
+    plan             — optimized directive placement (advancedload ASAP,
+                       delegatestore ALAP, noupdate, groups, async+sync)
+    naive_plan       — the paper's baseline policy (Figs. 4a/5a)
+    execute          — instrumented two-space executor
+    run_host_oracle  — pure-host reference semantics
+    emit             — HMPP-style generated source (paper Table 2)
+    DeviceResidency  — runtime residency tracker for the training substrates
+"""
+from .analysis import ProgramAnalysis, analyze
+from .emitter import emit
+from .executor import ExecStats, PlanExecutionError, execute, run_host_oracle
+from .ir import (AdvancedLoad, Block, BlockKind, Callsite, DelegateStore,
+                 GroupDecl, Plan, PlanOp, Program, Release, Synchronize,
+                 VarIO)
+from .planner import naive_plan, plan, transfer_summary
+from .residency import DeviceResidency, ResidencyStats
+
+__all__ = [
+    "Program", "Block", "BlockKind", "VarIO", "Plan", "PlanOp",
+    "AdvancedLoad", "DelegateStore", "Callsite", "Synchronize", "Release",
+    "GroupDecl",
+    "ProgramAnalysis", "analyze", "plan", "naive_plan", "transfer_summary",
+    "execute", "run_host_oracle", "ExecStats", "PlanExecutionError",
+    "emit", "DeviceResidency", "ResidencyStats",
+]

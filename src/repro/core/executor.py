@@ -1,0 +1,285 @@
+"""Plan executor: two memory spaces, instrumented transfers.
+
+The paper's generated HMPP code runs on CPU+GPU; here "host" is numpy (or a
+``pinned_host``-memory jax.Array — see ``optim/offload.py`` for that mode)
+and "device" is the default JAX device space.  The executor walks a ``Plan``,
+runs host blocks with numpy, offload blocks as jitted JAX functions, and
+performs transfers ONLY where the plan says so — transfer counts/bytes/wall
+times are recorded, which is exactly what the paper's Figs. 4-6 measure.
+
+The executor also *verifies* the plan: reading a variable from a space with
+no valid copy raises ``PlanExecutionError`` (the property tests drive random
+programs through this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, GroupDecl,
+                 Plan, PlanOp, Program, Release, Synchronize)
+
+__all__ = ["execute", "run_host_oracle", "ExecStats", "PlanExecutionError"]
+
+
+class PlanExecutionError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class ExecStats:
+    h2d_transfers: int = 0
+    h2d_bytes: int = 0
+    d2h_transfers: int = 0
+    d2h_bytes: int = 0
+    kernel_calls: int = 0
+    host_calls: int = 0
+    syncs: int = 0
+    h2d_time: float = 0.0
+    d2h_time: float = 0.0
+    kernel_time: float = 0.0
+    host_time: float = 0.0
+    sync_time: float = 0.0
+    wall_time: float = 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Slot:
+    host: Optional[np.ndarray] = None
+    device: Optional[jax.Array] = None
+    valid_host: bool = False
+    valid_device: bool = False
+
+
+def _nbytes(x) -> int:
+    return int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+
+
+@functools.lru_cache(maxsize=512)
+def _jitted(fn, names: Tuple[str, ...], writes: Tuple[str, ...]):
+    def wrapped(*arrays):
+        out = fn(jnp, **dict(zip(names, arrays)))
+        return tuple(out[w] for w in writes)
+    return jax.jit(wrapped)
+
+
+def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
+            *, check: bool = True
+            ) -> Tuple[Dict[str, np.ndarray], ExecStats]:
+    """Run the plan; return (program outputs on host, stats)."""
+    program = p.program
+    env: Dict[str, _Slot] = {}
+    stats = ExecStats()
+    bound = dict(program.inputs)
+    if inputs:
+        bound.update(inputs)
+    for k, v in bound.items():
+        if isinstance(v, jax.ShapeDtypeStruct):
+            raise PlanExecutionError(
+                f"program input {k!r} is abstract; pass a concrete array")
+        env[k] = _Slot(host=np.asarray(v), valid_host=True)
+
+    # nest the linear ops into a tree so loops can be re-entered n times
+    tree = _nest(p.ops, program)
+    t0 = time.perf_counter()
+    _run(tree, program, env, stats, check)
+    stats.wall_time = time.perf_counter() - t0
+
+    outs = {}
+    for name in (program.outputs or ()):
+        slot = env.get(name)
+        if slot is None:
+            raise PlanExecutionError(f"output {name!r} never produced")
+        if not slot.valid_host:
+            if check:
+                raise PlanExecutionError(
+                    f"output {name!r} not on host at program end "
+                    f"(missing delegatestore)")
+            slot.host = np.asarray(slot.device)
+            slot.valid_host = True
+        outs[name] = slot.host
+    return outs, stats
+
+
+def _nest(ops: List[PlanOp], program: Program):
+    """linear ops -> list of ('op', PlanOp) | ('loop', loop_id, body)."""
+    def parse(i: int, stop_loop: Optional[int]):
+        body = []
+        while i < len(ops):
+            op = ops[i]
+            if op.kind == "loop_begin":
+                inner, i = parse(i + 1, op.loop_id)
+                body.append(("loop", op.loop_id, inner))
+            elif op.kind == "loop_end":
+                if op.loop_id != stop_loop:
+                    raise PlanExecutionError("malformed loop nesting")
+                return body, i
+            else:
+                body.append(("op", op))
+            i += 1
+        return body, i
+    tree, _ = parse(0, None)
+    return tree
+
+
+def _run(tree, program: Program, env: Dict[str, _Slot], stats: ExecStats,
+         check: bool) -> None:
+    for item in tree:
+        if item[0] == "loop":
+            _, loop_id, body = item
+            for _ in range(program.loops[loop_id].n_iters):
+                _run(body, program, env, stats, check)
+            continue
+        op: PlanOp = item[1]
+        if op.kind == "directive":
+            _run_directive(op.directive, env, stats, check)
+        elif op.kind == "block":
+            _run_block(program, op.block_idx, env, stats, check)
+
+
+def _run_directive(d, env, stats: ExecStats, check: bool) -> None:
+    if isinstance(d, AdvancedLoad):
+        slot = env.setdefault(d.var, _Slot())
+        if not slot.valid_host:
+            raise PlanExecutionError(
+                f"advancedload {d.var!r}: no valid host copy")
+        t = time.perf_counter()
+        slot.device = jnp.asarray(slot.host)
+        stats.h2d_time += time.perf_counter() - t
+        stats.h2d_transfers += 1
+        stats.h2d_bytes += _nbytes(slot.host)
+        slot.valid_device = True
+    elif isinstance(d, DelegateStore):
+        slot = env.setdefault(d.var, _Slot())
+        if not slot.valid_device:
+            raise PlanExecutionError(
+                f"delegatestore {d.var!r}: no valid device copy")
+        t = time.perf_counter()
+        slot.host = np.asarray(slot.device)
+        stats.d2h_time += time.perf_counter() - t
+        stats.d2h_transfers += 1
+        stats.d2h_bytes += _nbytes(slot.host)
+        slot.valid_host = True
+    elif isinstance(d, Synchronize):
+        t = time.perf_counter()
+        for slot in env.values():
+            if slot.valid_device and slot.device is not None:
+                slot.device.block_until_ready()
+        stats.sync_time += time.perf_counter() - t
+        stats.syncs += 1
+    elif isinstance(d, Release):
+        for slot in env.values():
+            if slot.valid_host:
+                slot.device = None
+                slot.valid_device = False
+    elif isinstance(d, (GroupDecl, Callsite)):
+        pass  # metadata; the following block op performs the call
+
+
+def _dummy_like(slot: _Slot, xp):
+    """Placeholder for a declared-but-unread input (pruned by the analyzer);
+    it is provably dead inside the block, so a zeros array of the right
+    shape/dtype is passed without charging a transfer."""
+    src = slot.device if slot.device is not None else slot.host
+    return xp.zeros(src.shape, src.dtype)
+
+
+def _run_block(program: Program, idx: int, env: Dict[str, _Slot],
+               stats: ExecStats, check: bool) -> None:
+    blk = program.blocks[idx]
+    actual = set(blk.effective_reads())
+    if blk.kind is BlockKind.OFFLOAD:
+        args = []
+        for v in blk.reads:
+            slot = env.setdefault(v, _Slot())
+            if v not in actual:
+                args.append(_dummy_like(slot, jnp))
+                continue
+            if not slot.valid_device:
+                if check:
+                    raise PlanExecutionError(
+                        f"codelet {blk.name!r} reads {v!r}: not on device "
+                        f"(missing advancedload)")
+                slot.device = jnp.asarray(slot.host)
+                slot.valid_device = True
+            args.append(slot.device)
+        fn = _jitted(blk.fn, tuple(blk.reads), tuple(blk.writes))
+        t = time.perf_counter()
+        outs = fn(*args)
+        stats.kernel_time += time.perf_counter() - t
+        stats.kernel_calls += 1
+        for w, val in zip(blk.writes, outs):
+            slot = env.setdefault(w, _Slot())
+            slot.device = val
+            slot.valid_device, slot.valid_host = True, False
+    else:
+        kwargs = {}
+        for v in blk.reads:
+            slot = env.setdefault(v, _Slot())
+            if v not in actual:
+                kwargs[v] = _dummy_like(slot, np)
+                continue
+            if not slot.valid_host:
+                if check:
+                    raise PlanExecutionError(
+                        f"host block {blk.name!r} reads {v!r}: not on host "
+                        f"(missing delegatestore)")
+                slot.host = np.asarray(slot.device)
+                slot.valid_host = True
+            kwargs[v] = slot.host
+        t = time.perf_counter()
+        outs = blk.fn(np, **kwargs)
+        stats.host_time += time.perf_counter() - t
+        stats.host_calls += 1
+        for w in blk.writes:
+            slot = env.setdefault(w, _Slot())
+            slot.host = np.asarray(outs[w])
+            slot.valid_host, slot.valid_device = True, False
+
+
+def run_host_oracle(program: Program,
+                    inputs: Optional[Dict[str, np.ndarray]] = None
+                    ) -> Dict[str, np.ndarray]:
+    """Reference semantics: run every block on the host with numpy, loops
+    executed for real, no device, no transfers.  The property tests assert
+    ``execute(plan(p)) == execute(naive_plan(p)) == run_host_oracle(p)``."""
+    env: Dict[str, np.ndarray] = {}
+    bound = dict(program.inputs)
+    if inputs:
+        bound.update(inputs)
+    for k, v in bound.items():
+        env[k] = np.asarray(v)
+
+    def run_span(blocks_iter, path):
+        # execute blocks honoring loop trip counts via recursive grouping
+        i = 0
+        while i < len(blocks_iter):
+            blk = blocks_iter[i]
+            rel = blk.loop_path[len(path):]
+            if not rel:
+                out = blk.fn(np, **{v: env[v] for v in blk.reads})
+                for w in blk.writes:
+                    env[w] = np.asarray(out[w])
+                i += 1
+            else:
+                lid = rel[0]
+                j = i
+                while j < len(blocks_iter) and \
+                        len(blocks_iter[j].loop_path) > len(path) and \
+                        blocks_iter[j].loop_path[len(path)] == lid:
+                    j += 1
+                for _ in range(program.loops[lid].n_iters):
+                    run_span(blocks_iter[i:j], path + (lid,))
+                i = j
+
+    run_span(program.blocks, ())
+    return {name: env[name] for name in (program.outputs or env.keys())}

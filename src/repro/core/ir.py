@@ -1,0 +1,242 @@
+"""Program IR for the OMP2HMPP-style offload planner.
+
+The paper's input is C source with OpenMP pragmas; ours is a ``Program``: an
+ordered list of ``Block``s (host or offload), optionally nested in counted
+loops, operating on a shared environment of named arrays.  This is the
+JAX-native analogue of the paper's AST view of the program: enough structure
+for the def/use + loop-nesting analysis of Section 2 of the paper, while the
+block bodies stay ordinary (traceable) array code.
+
+Block body convention
+---------------------
+Every block function has the signature ``fn(xp, **arrays) -> dict``:
+``xp`` is ``numpy`` when the block runs on the host and ``jax.numpy`` when it
+runs on the device (or is traced for analysis).  It must return a dict
+mapping written variable names to arrays.  This single-source convention is
+what lets the analyzer trace *both* host and offload blocks to jaxprs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "BlockKind", "VarIO", "Block", "LoopInfo", "Program",
+    "Directive", "AdvancedLoad", "DelegateStore", "Callsite", "Synchronize",
+    "Release", "GroupDecl", "Plan", "PlanOp",
+]
+
+
+class BlockKind(enum.Enum):
+    HOST = "host"
+    OFFLOAD = "offload"
+
+
+class VarIO(enum.Enum):
+    """HMPP ``args[x].io=`` classification for a variable w.r.t. a codelet."""
+    IN = "in"
+    OUT = "out"
+    INOUT = "inout"
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopInfo:
+    loop_id: int
+    n_iters: int
+    parent_path: Tuple[int, ...]  # enclosing loop ids, outermost first
+
+    @property
+    def path(self) -> Tuple[int, ...]:
+        return self.parent_path + (self.loop_id,)
+
+
+@dataclasses.dataclass
+class Block:
+    idx: int
+    kind: BlockKind
+    fn: Callable[..., Dict[str, Any]]
+    reads: Tuple[str, ...]          # declared inputs (superset of actual)
+    writes: Tuple[str, ...]
+    loop_path: Tuple[int, ...]      # enclosing loop ids, outermost first
+    name: str
+    # Filled in by analysis:
+    actual_reads: Optional[Tuple[str, ...]] = None
+
+    @property
+    def label(self) -> str:
+        return f"_instr_{self.name}_ol_{self.idx}"
+
+    def effective_reads(self) -> Tuple[str, ...]:
+        return self.actual_reads if self.actual_reads is not None else self.reads
+
+
+class Program:
+    """Builder for block programs.
+
+    >>> p = Program()
+    >>> p.bind("A", np.zeros((4, 4)))
+    >>> p.host(init_fn, reads=(), writes=("A",), name="init")
+    >>> with p.loop(10):
+    ...     p.offload(kernel_fn, reads=("A",), writes=("C",), name="k0")
+    >>> p.host(use_fn, reads=("C",), writes=("out",), name="use")
+    """
+
+    def __init__(self, name: str = "main"):
+        self.name = name
+        self.blocks: List[Block] = []
+        self.loops: Dict[int, LoopInfo] = {}
+        self.inputs: Dict[str, Any] = {}      # name -> concrete array or SDS
+        self.outputs: Tuple[str, ...] = ()    # vars wanted on host at exit
+        self._loop_stack: List[int] = []
+        self._next_loop_id = 0
+
+    # -- builder -----------------------------------------------------------
+    def bind(self, name: str, value: Any) -> None:
+        """Declare a program input (concrete array or ShapeDtypeStruct)."""
+        self.inputs[name] = value
+
+    def set_outputs(self, *names: str) -> None:
+        """Vars the caller wants back on the host when the program ends."""
+        self.outputs = tuple(names)
+
+    def _add_block(self, kind: BlockKind, fn, reads, writes, name) -> Block:
+        blk = Block(
+            idx=len(self.blocks), kind=kind, fn=fn,
+            reads=tuple(reads), writes=tuple(writes),
+            loop_path=tuple(self._loop_stack),
+            name=name or fn.__name__,
+        )
+        self.blocks.append(blk)
+        return blk
+
+    def host(self, fn, *, reads: Sequence[str], writes: Sequence[str],
+             name: str = "") -> Block:
+        return self._add_block(BlockKind.HOST, fn, reads, writes, name)
+
+    def offload(self, fn, *, reads: Sequence[str], writes: Sequence[str],
+                name: str = "") -> Block:
+        """The analogue of ``#pragma omp parallel for target cuda``."""
+        return self._add_block(BlockKind.OFFLOAD, fn, reads, writes, name)
+
+    def loop(self, n_iters: int) -> "_LoopCtx":
+        return _LoopCtx(self, n_iters)
+
+    # -- queries used by the analyzer/planner ------------------------------
+    def loop_path_of(self, idx: int) -> Tuple[int, ...]:
+        return self.blocks[idx].loop_path
+
+    def offload_blocks(self) -> List[Block]:
+        return [b for b in self.blocks if b.kind is BlockKind.OFFLOAD]
+
+    def host_blocks(self) -> List[Block]:
+        return [b for b in self.blocks if b.kind is BlockKind.HOST]
+
+
+class _LoopCtx:
+    def __init__(self, prog: Program, n_iters: int):
+        self.prog, self.n_iters = prog, n_iters
+
+    def __enter__(self):
+        info = LoopInfo(
+            loop_id=self.prog._next_loop_id,
+            n_iters=self.n_iters,
+            parent_path=tuple(self.prog._loop_stack),
+        )
+        self.prog._next_loop_id += 1
+        self.prog.loops[info.loop_id] = info
+        self.prog._loop_stack.append(info.loop_id)
+        self.info = info
+        return info
+
+    def __exit__(self, *exc):
+        self.prog._loop_stack.pop()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Directives — the HMPP vocabulary the planner emits (paper §1.1).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Directive:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class AdvancedLoad(Directive):
+    """Upload ``var`` host→device.  Placed as early as possible (Fig. 4b)."""
+    var: str
+    group: int
+    asynchronous: bool = True
+    hoisted_from: Tuple[int, ...] = ()   # loop ids it was hoisted out of
+
+
+@dataclasses.dataclass(frozen=True)
+class DelegateStore(Directive):
+    """Download ``var`` device→host.  Placed as late as possible (Fig. 5b)."""
+    var: str
+    group: int
+    hoisted_from: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Callsite(Directive):
+    block_idx: int
+    group: int
+    io: Tuple[Tuple[str, str], ...]        # (var, "in"/"out"/"inout")
+    noupdate: Tuple[str, ...] = ()         # vars already device-resident
+    asynchronous: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Synchronize(Directive):
+    """Wait for async callsite ``block_idx`` (placed before first use)."""
+    block_idx: int
+    group: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Release(Directive):
+    group: int
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupDecl(Directive):
+    group: int
+    mapbyname: Tuple[str, ...]
+    target: str = "CUDA"  # kept for fidelity with the paper; ours is "TPU"
+
+
+# ---------------------------------------------------------------------------
+# Plan — the "generated source": program items interleaved with directives.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanOp:
+    """One entry of the linearized plan.
+
+    kind: 'directive' | 'block' | 'loop_begin' | 'loop_end'
+    """
+    kind: str
+    directive: Optional[Directive] = None
+    block_idx: Optional[int] = None
+    loop_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Plan:
+    program: Program
+    ops: List[PlanOp]
+    groups: Dict[int, Tuple[int, ...]]       # group id -> offload block idxs
+    io_table: Dict[int, Dict[str, VarIO]]    # block idx -> var -> io
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def directives(self, cls=None) -> List[Directive]:
+        out = [op.directive for op in self.ops if op.kind == "directive"]
+        if cls is not None:
+            out = [d for d in out if isinstance(d, cls)]
+        return out
+
+    def count(self, cls) -> int:
+        return len(self.directives(cls))

@@ -1,0 +1,115 @@
+"""Runtime device-residency tracker — the ``noupdate``/``mapbyname`` machinery
+used by the training-loop substrates (data pipeline, optimizer offload,
+async checkpointing) outside the block-program executor.
+
+A ``DeviceResidency`` owns named buffers that may have a host copy, a device
+copy, or both, and performs transfers lazily with the paper's policy:
+uploads as early as the caller schedules them (``prefetch`` = advancedload),
+downloads as late as possible (``fetch`` only when the host actually reads =
+delegatestore), and no transfer at all when the requested space already holds
+a valid copy (noupdate).  All movement is instrumented.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DeviceResidency", "ResidencyStats"]
+
+
+@dataclasses.dataclass
+class ResidencyStats:
+    h2d_transfers: int = 0
+    h2d_bytes: int = 0
+    d2h_transfers: int = 0
+    d2h_bytes: int = 0
+    elided: int = 0
+    h2d_time: float = 0.0
+    d2h_time: float = 0.0
+
+
+@dataclasses.dataclass
+class _Entry:
+    host: Optional[np.ndarray] = None
+    device: Optional[Any] = None
+    valid_host: bool = False
+    valid_device: bool = False
+
+
+def _leaf_bytes(x) -> int:
+    return int(np.prod(np.shape(x))) * np.dtype(
+        getattr(x, "dtype", np.float32)).itemsize
+
+
+class DeviceResidency:
+    def __init__(self, device: Optional[jax.Device] = None):
+        self._entries: Dict[str, _Entry] = {}
+        self.stats = ResidencyStats()
+        self._device = device
+
+    # -- host side ---------------------------------------------------------
+    def put_host(self, name: str, value: np.ndarray) -> None:
+        """A host write: invalidates any device copy (paper: CPU write ⇒
+        re-advancedload needed)."""
+        e = self._entries.setdefault(name, _Entry())
+        e.host = np.asarray(value)
+        e.valid_host, e.valid_device = True, False
+
+    def fetch(self, name: str) -> np.ndarray:
+        """Host read — delegatestore happens here, as late as possible."""
+        e = self._entries[name]
+        if e.valid_host:
+            self.stats.elided += 1
+            return e.host
+        t = time.perf_counter()
+        e.host = np.asarray(e.device)
+        self.stats.d2h_time += time.perf_counter() - t
+        self.stats.d2h_transfers += 1
+        self.stats.d2h_bytes += _leaf_bytes(e.host)
+        e.valid_host = True
+        return e.host
+
+    # -- device side -------------------------------------------------------
+    def put_device(self, name: str, value) -> None:
+        """A device write (kernel output): invalidates the host copy."""
+        e = self._entries.setdefault(name, _Entry())
+        e.device = value
+        e.valid_device, e.valid_host = True, False
+
+    def prefetch(self, name: str) -> None:
+        """advancedload: schedule the upload now (async under JAX) so it
+        overlaps whatever runs next; no-op if already resident."""
+        e = self._entries[name]
+        if e.valid_device:
+            self.stats.elided += 1
+            return
+        t = time.perf_counter()
+        e.device = jax.device_put(e.host, self._device)
+        self.stats.h2d_time += time.perf_counter() - t
+        self.stats.h2d_transfers += 1
+        self.stats.h2d_bytes += _leaf_bytes(e.host)
+        e.valid_device = True
+
+    def device_value(self, name: str):
+        """Device read; uploads on demand (the *unoptimized* path — callers
+        that care should have prefetched)."""
+        e = self._entries[name]
+        if not e.valid_device:
+            self.prefetch(name)
+        return e.device
+
+    def resident(self, name: str) -> bool:
+        e = self._entries.get(name)
+        return bool(e and e.valid_device)
+
+    def release(self, name: Optional[str] = None) -> None:
+        names = [name] if name else list(self._entries)
+        for n in names:
+            e = self._entries[n]
+            e.device = None
+            e.valid_device = False

@@ -1,0 +1,8 @@
+"""Distribution: sharding rules, collectives, pipeline parallelism."""
+from .sharding import (MeshPolicy, ShardingRules, batch_axes, batch_specs,
+                       cache_shardings, make_rules, spec_for_axes,
+                       tree_shardings)
+
+__all__ = ["MeshPolicy", "ShardingRules", "batch_axes", "batch_specs",
+           "cache_shardings", "make_rules", "spec_for_axes",
+           "tree_shardings"]

@@ -1,0 +1,96 @@
+"""Distributed-optimization collectives: hierarchical gradient sync with
+int8 compression + error feedback for the slow cross-pod hop.
+
+On a (pod, data, model) mesh the gradient all-reduce decomposes as
+    reduce within pod (fast ICI)  →  all-reduce across pods (slow DCI).
+``hierarchical_psum_compressed`` keeps the intra-pod reduction in bf16/fp32
+and quantizes only the cross-pod leg to int8 with a per-tensor scale;
+``ErrorFeedback`` carries the quantization residual into the next step
+(Seide et al., 2014 — 1-bit SGD lineage), which restores convergence to
+uncompressed quality (tested in tests/test_collectives.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["quantize_int8", "dequantize_int8", "psum_compressed",
+           "hierarchical_psum_compressed", "ErrorFeedback",
+           "grad_sync_shard_map"]
+
+
+def quantize_int8(x) -> Tuple[jax.Array, jax.Array]:
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def psum_compressed(x, axis_name: str):
+    """int8-compressed psum over ``axis_name`` (inside shard_map): quantize,
+    reduce in int32 (exact for ≤ 2^23 summands), dequantize with the
+    summed-scale — an unbiased linear approximation since each shard
+    contributes q_i·s_i and we use a shared max-scale via psum-max."""
+    shared_scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name) / 127.0
+    shared_scale = jnp.maximum(shared_scale, 1e-12)
+    q = jnp.clip(jnp.round(x / shared_scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * shared_scale
+
+
+def hierarchical_psum_compressed(x, *, pod_axis: str = "pod",
+                                 data_axis: str = "data"):
+    """Exact psum within the pod, int8-compressed psum across pods."""
+    within = jax.lax.psum(x, data_axis)
+    return psum_compressed(within, pod_axis)
+
+
+class ErrorFeedback:
+    """Residual carry for compressed gradients:  g̃ = C(g + e);
+    e' = (g + e) − g̃.  State is a pytree like the grads."""
+
+    @staticmethod
+    def init(grads):
+        return jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads, error, compress_fn):
+        corrected = jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + e, grads, error)
+        compressed = jax.tree.map(compress_fn, corrected)
+        new_error = jax.tree.map(lambda c, comp: c - comp,
+                                 corrected, compressed)
+        return compressed, new_error
+
+
+def grad_sync_shard_map(mesh, *, compressed: bool = True):
+    """Returns a function all-reducing a replicated-gradient pytree across
+    the pod axis via shard_map (the cross-pod hop of the hierarchical
+    scheme); used when the pod axis runs pure DP."""
+    from jax.experimental.shard_map import shard_map
+
+    axis = "pod"
+    if axis not in mesh.shape:
+        return lambda g: g
+
+    def sync_leaf(g):
+        spec = P(*([None] * g.ndim))
+
+        def body(gl):
+            if compressed:
+                return psum_compressed(gl, axis) / mesh.shape[axis]
+            return jax.lax.psum(gl, axis) / mesh.shape[axis]
+
+        return shard_map(body, mesh=mesh, in_specs=(spec,),
+                         out_specs=spec, check_rep=False)(g)
+
+    return lambda grads: jax.tree.map(sync_leaf, grads)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots + jnp oracles.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), wrapped in ops.py,
+validated against ref.py in tests (interpret mode on CPU)."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh(es) and record memory/cost/collective artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --outdir artifacts/dryrun
+
+The two XLA_FLAGS lines above MUST run before any other import (jax locks
+the device count on first init); smoke tests and benches never import this
+module, so they see the real single CPU device.
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch.steps import build_cell                 # noqa: E402
+from repro.roofline import roofline_terms                 # noqa: E402
+
+DEFAULT_TRAIN_ACCUM = 4   # fits every train cell within 16 GB/chip
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: Path,
+             *, save_hlo: bool = False, variant: str = "baseline",
+             overrides=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+
+    # spec'd skip: long_500k needs sub-quadratic attention
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "multi" if multi_pod else "single",
+               "status": "SKIP",
+               "reason": "pure full-attention arch; long_500k requires "
+                         "sub-quadratic attention (DESIGN.md §6)"}
+        _write(outdir, rec, variant)
+        print(f"SKIP  {arch} × {shape_name}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    kwargs = dict(overrides or {})
+    if shape.kind == "train":
+        kwargs.setdefault("grad_accum", DEFAULT_TRAIN_ACCUM)
+    grad_accum = kwargs.get("grad_accum", 1)
+    cell = build_cell(cfg, shape, mesh, **kwargs)
+    with mesh:
+        lowered = cell.lower()
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    n_dev = mesh.size
+    roof = roofline_terms(cfg, shape, n_dev, hlo, grad_accum=grad_accum,
+                          kv_bytes=1 if kwargs.get("kv_quant") else 2)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": dict(mesh.shape),
+        "status": "OK",
+        "variant": variant,
+        "kind": shape.kind,
+        "optimizer": cell.meta.get("optimizer"),
+        "grad_accum": grad_accum,
+        "dropped_shardings": cell.meta.get("dropped", []),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "xla_flops_per_device_raw": ca.get("flops", 0.0),
+        "xla_bytes_per_device_raw": ca.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(ma, "generated_code_size_in_bytes", None),
+        },
+        "roofline": roof,
+        "n_devices": n_dev,
+    }
+    _write(outdir, rec, variant)
+    if save_hlo:
+        (outdir / f"{arch}__{shape_name}__"
+         f"{'multi' if multi_pod else 'single'}__{variant}.hlo.txt"
+         ).write_text(hlo)
+    tot_coll_mb = sum(
+        v["bytes"] for v in roof["collectives"].values()) / 1e6
+    print(f"OK    {arch} × {shape_name} × "
+          f"{'multi' if multi_pod else 'single'} [{variant}] "
+          f"compile={t_compile:.0f}s "
+          f"temp/dev={rec['memory']['temp_bytes']/1e9:.2f}GB "
+          f"terms(c/m/n)={roof['compute_s']:.3f}/"
+          f"{roof['memory_s']:.3f}/{roof['collective_s']:.3f}s "
+          f"bottleneck={roof['bottleneck']} "
+          f"roofline={roof['roofline_fraction']:.2f} "
+          f"coll={tot_coll_mb:.0f}MB")
+    return rec
+
+
+def _write(outdir: Path, rec, variant: str):
+    outdir.mkdir(parents=True, exist_ok=True)
+    name = (f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+            f"__{variant}.json")
+    (outdir / name).write_text(json.dumps(rec, indent=2, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", default="artifacts/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--offload-opt", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="expert-parallel shard_map MoE")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--fsdp-layers", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(list_archs()) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    outdir = Path(args.outdir)
+    overrides = {}
+    if args.offload_opt:
+        overrides["offload_opt"] = True
+    if args.moe_ep:
+        overrides["moe_ep"] = True
+    if args.grad_accum is not None:
+        overrides["grad_accum"] = args.grad_accum
+    if args.kv_quant:
+        overrides["kv_quant"] = True
+    if args.fsdp_layers:
+        overrides["fsdp_layers"] = True
+    if args.seq_shard:
+        overrides["seq_shard"] = True
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                try:
+                    run_cell(arch, shape, multi, outdir,
+                             save_hlo=args.save_hlo, variant=args.variant,
+                             overrides=overrides)
+                except Exception as e:
+                    failures.append((arch, shape, multi, repr(e)))
+                    print(f"FAIL  {arch} × {shape} × "
+                          f"{'multi' if multi else 'single'}: {e!r}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Step builders: abstract input specs + sharded jitted step functions for
+every (arch × shape) cell.  Used by the dry-run, the train/serve drivers and
+the benchmarks."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.distributed import (MeshPolicy, batch_specs, cache_shardings,
+                               make_rules, tree_shardings)
+from repro.models import Transformer
+from repro.optim import (default_optimizer, offload_shardings,
+                         offloaded_optimizer)
+
+__all__ = ["input_specs", "build_cell", "CellArtifacts"]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        out: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.input_embeds:
+            out["embeds"] = jax.ShapeDtypeStruct((B, cfg.d_model), dt)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        out["pos"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        return out
+    out = {}
+    if cfg.input_embeds:
+        out["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        lshape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+        out["labels"] = jax.ShapeDtypeStruct(lshape, jnp.int32)
+    return out
+
+
+class CellArtifacts:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+
+    def __init__(self, fn, args_abstract: Tuple[Any, ...],
+                 donate: Tuple[int, ...], in_shardings, out_shardings,
+                 meta: Dict[str, Any]):
+        self.fn = fn
+        self.args_abstract = args_abstract
+        self.donate = donate
+        self.in_shardings = in_shardings
+        self.out_shardings = out_shardings
+        self.meta = meta
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        return self.jitted().lower(*self.args_abstract)
+
+
+def _opt_state_shardings(mesh, aparams, p_sh, aopt, opt_name: str):
+    """Optimizer-state shardings mirroring the param shardings."""
+    rep = NamedSharding(mesh, PartitionSpec())
+    if opt_name == "adamw":
+        return {"m": p_sh, "v": p_sh, "step": rep}
+
+    def factor_sh(p, s):
+        spec = tuple(s.spec) + (None,) * (p.ndim - len(tuple(s.spec)))
+        if p.ndim >= 2:
+            return {
+                "vr": NamedSharding(mesh, PartitionSpec(*spec[:-1])),
+                "vc": NamedSharding(mesh,
+                                    PartitionSpec(*(spec[:-2] + spec[-1:]))),
+            }
+        return {"v": s}
+
+    return {
+        "factors": jax.tree.map(factor_sh, aparams, p_sh,
+                                is_leaf=lambda x: hasattr(x, "shape")),
+        "step": rep,
+    }
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+               use_pallas: bool = False, offload_opt: bool = False,
+               remat: bool = True, grad_accum: int = 1,
+               moe_ep: bool = False,
+               kv_quant: bool = False,
+               fsdp_layers: bool = False,
+               seq_shard: bool = False) -> CellArtifacts:
+    model = Transformer(cfg, use_pallas=use_pallas, moe_ep=moe_ep,
+                        kv_quant=kv_quant)
+    kind = shape.kind
+    rules = make_rules(mesh, kind, fsdp_layers=fsdp_layers)
+    policy = MeshPolicy(rules, cfg, seq_shard=seq_shard)
+    aparams = model.abstract_params()
+    p_sh = tree_shardings(rules, aparams, model.logical_axes())
+    ispecs = input_specs(cfg, shape)
+    b_sh = batch_specs(rules, cfg, kind, ispecs)
+    rep = NamedSharding(mesh, PartitionSpec())
+    meta = {"arch": cfg.name, "shape": shape.name, "kind": kind,
+            "mesh_shape": dict(mesh.shape), "dropped": rules.dropped,
+            "kv_quant": kv_quant, "fsdp_layers": fsdp_layers,
+            "moe_ep": moe_ep}
+
+    if kind == "train":
+        opt = default_optimizer(cfg)
+        aopt = jax.eval_shape(opt.init, aparams)
+        o_sh = _opt_state_shardings(mesh, aparams, p_sh, aopt, opt.name)
+        if offload_opt:
+            o_sh = offload_shardings(o_sh)
+            opt = offloaded_optimizer(opt)
+        meta["optimizer"] = opt.name
+
+        def train_step(params, opt_state, batch):
+            if grad_accum > 1:
+                mbs = jax.tree.map(
+                    lambda t: t.reshape(
+                        (grad_accum, t.shape[0] // grad_accum)
+                        + t.shape[1:]), batch)
+
+                def mb_body(acc, mb):
+                    g_acc, l_acc = acc
+                    (loss, _), grads = jax.value_and_grad(
+                        model.loss, has_aux=True)(params, mb, policy)
+                    g_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32),
+                        g_acc, grads)
+                    return (g_acc, l_acc + loss), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(mb_body, (g0, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / grad_accum, grads)
+                loss = loss / grad_accum
+                metrics = {"ce": loss, "aux": 0.0}
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, batch, policy)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return new_params, new_opt, {"loss": loss, **metrics}
+
+        batch_abs = {k: ispecs[k] for k in ispecs}
+        return CellArtifacts(
+            fn=train_step,
+            args_abstract=(aparams, aopt, batch_abs),
+            donate=(0, 1),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh,
+                           jax.tree.map(lambda _: rep,
+                                        {"loss": 0, "ce": 0, "aux": 0})),
+            meta=meta,
+        )
+
+    if kind == "prefill":
+        max_seq = shape.seq_len
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, max_seq=max_seq,
+                                 policy=policy)
+
+        acache = jax.eval_shape(prefill, aparams, dict(ispecs))[1]
+        c_sh = cache_shardings(rules, acache)
+        return CellArtifacts(
+            fn=prefill,
+            args_abstract=(aparams, dict(ispecs)),
+            donate=(),
+            in_shardings=(p_sh, b_sh),
+            out_shardings=(rep, c_sh),
+            meta=meta,
+        )
+
+    # decode
+    max_seq = shape.seq_len
+    B = shape.global_batch
+    acache = jax.eval_shape(
+        lambda: model.init_cache(B, max_seq))
+    c_sh = cache_shardings(rules, acache)
+    pos_spec = ispecs.pop("pos")
+
+    def serve_step(params, cache, batch, pos):
+        logits, new_cache = model.decode_step(params, cache, batch, pos,
+                                              policy=policy)
+        # greedy next token — the serving driver feeds it back
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    tok_sh = batch_specs(rules, cfg, kind, ispecs)
+    p_axes = batch_specs(rules, cfg, kind, {"pos": pos_spec})["pos"]
+    ntok_ndim = 2 if cfg.n_codebooks else 1
+    return CellArtifacts(
+        fn=serve_step,
+        args_abstract=(aparams, acache, dict(ispecs), pos_spec),
+        donate=(1,),
+        in_shardings=(p_sh, c_sh, tok_sh, p_axes),
+        out_shardings=(NamedSharding(
+            mesh, PartitionSpec(*([None] * ntok_ndim))), c_sh),
+        meta=meta,
+    )

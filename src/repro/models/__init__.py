@@ -1,0 +1,6 @@
+"""Model substrate: assigned architectures as one composable Transformer."""
+from .layers import P, Policy, cross_entropy, rms_norm
+from .transformer import Transformer, model_spec
+
+__all__ = ["Transformer", "model_spec", "P", "Policy", "cross_entropy",
+           "rms_norm"]

@@ -1,0 +1,118 @@
+"""Griffin recurrent block: temporal conv + RG-LRU gated linear recurrence
+[arXiv:2402.19427].
+
+The RG-LRU diagonal recurrence
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+    a_t = exp(-c · softplus(Λ) ⊙ σ(W_a x_t))
+is associative → training uses ``jax.lax.associative_scan`` (parallel,
+O(log T) depth); decode is a single-step update carrying (h, conv window).
+The full Griffin block is the gated variant:
+    out = W_out ( GeLU(W_gate x) ⊙ RG-LRU(conv1d(W_x x)) ).
+On real TPU the scan is the Pallas kernel ``repro.kernels.rglru_scan``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, Policy
+
+__all__ = ["rglru_spec", "rglru_apply", "rglru_decode", "init_rglru_cache",
+           "rglru_scan_ref", "RGLRU_C"]
+
+RGLRU_C = 8.0
+
+
+def rglru_spec(cfg, prefix_shape=(), prefix_names=()) -> Dict[str, Any]:
+    pa, pn = tuple(prefix_shape), tuple(prefix_names)
+    d = cfg.d_model
+    w = cfg.rglru_conv_width
+    return {
+        "w_x":    P(pa + (d, d), pn + ("embed", "rnn")),
+        "w_gate": P(pa + (d, d), pn + ("embed", "rnn")),
+        "w_out":  P(pa + (d, d), pn + ("rnn", "embed")),
+        "conv_w": P(pa + (w, d), pn + (None, "rnn"), init="zeros"),
+        "conv_b": P(pa + (d,), pn + ("rnn",), init="zeros"),
+        "w_a":    P(pa + (d, d), pn + ("embed", "rnn")),
+        "w_i":    P(pa + (d, d), pn + ("embed", "rnn")),
+        "lam":    P(pa + (d,), pn + ("rnn",), init="ones"),
+    }
+
+
+def _gates(params, u, x):
+    """u: conv output (..., d) drives the recurrence input; x: raw block
+    input drives the gates (a_t, i_t)."""
+    a = jnp.exp(-RGLRU_C * jax.nn.softplus(params["lam"]).astype(jnp.float32)
+                * jax.nn.sigmoid(x @ params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(x @ params["w_i"]).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * \
+        (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t along axis 1 (time).  a, b: (B, T, D)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _conv1d(params, x, width: int, state=None):
+    """Causal depthwise temporal conv.  x: (B, T, d).  ``state``: (B, w-1, d)
+    previous inputs for decode continuity."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * params["conv_w"][i]
+              for i in range(width))
+    return out + params["conv_b"], xp[:, -(width - 1):]
+
+
+def rglru_apply(params, x, cfg, *, policy: Optional[Policy] = None,
+                use_pallas: bool = False):
+    """Training/prefill.  x: (B, T, d) -> (B, T, d)."""
+    u = x @ params["w_x"]
+    u, _ = _conv1d(params, u, cfg.rglru_conv_width)
+    a, b = _gates(params, u, x)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(a, b)
+    else:
+        h = rglru_scan_ref(a, b)
+    h = h.astype(x.dtype)
+    if policy is not None:
+        h = policy.acts(h, "rnn_hidden")
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    return (gate * h) @ params["w_out"]
+
+
+def init_rglru_cache(cfg, n_layers: int, batch: int, dtype=jnp.bfloat16):
+    d, w = cfg.d_model, cfg.rglru_conv_width
+    return {
+        "h": jnp.zeros((n_layers, batch, d), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, w - 1, d), dtype),
+    }
+
+
+def rglru_decode(params, x, cfg, cache, *,
+                 policy: Optional[Policy] = None):
+    """One step.  x: (B, 1, d); cache: dict(h (B,d), conv (B,w-1,d))."""
+    u = x @ params["w_x"]
+    u, conv_state = _conv1d(params, u, cfg.rglru_conv_width,
+                            state=cache["conv"])
+    a, b = _gates(params, u, x)
+    h = a[:, 0] * cache["h"] + b[:, 0]                 # (B, d) fp32
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    out = (gate * h[:, None].astype(x.dtype)) @ params["w_out"]
+    return out, {"h": h, "conv": conv_state}

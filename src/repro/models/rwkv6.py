@@ -1,0 +1,170 @@
+"""RWKV-6 "Finch" block [arXiv:2404.05892]: attention-free time-mix with
+data-dependent per-channel decay + squared-ReLU channel-mix.
+
+Per head (head size hs), with state S ∈ R^{hs×hs}:
+    o_t[j] = Σ_i r_t[i] · (S_{t-1}[i,j] + u[i]·k_t[i]·v_t[j])
+    S_t    = diag(w_t) · S_{t-1} + k_t ⊗ v_t
+where w_t = exp(-exp(w0 + lora_w(x̃_t))) is the data-dependent decay (the
+paper's headline novelty over RWKV-5) and the x̃ inputs are ddlerp token
+shifts.  Training uses a time scan (Pallas chunked kernel on real TPU:
+``repro.kernels.wkv6``); decode carries (S, x_prev) per layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, Policy, rms_norm
+
+__all__ = ["rwkv6_spec", "rwkv6_time_mix", "rwkv6_channel_mix",
+           "init_rwkv_cache", "wkv6_scan_ref"]
+
+LORA_R = 32
+_MIX = ("w", "k", "v", "r", "g")
+
+
+def rwkv6_spec(cfg, prefix_shape=(), prefix_names=()) -> Dict[str, Any]:
+    pa, pn = tuple(prefix_shape), tuple(prefix_names)
+    d, f = cfg.d_model, cfg.d_ff
+    tm: Dict[str, Any] = {
+        "mu_x": P(pa + (d,), pn + ("embed",), init="zeros"),
+        "w0":   P(pa + (d,), pn + ("embed",), init="zeros"),
+        "u":    P(pa + (d,), pn + ("embed",), init="zeros"),
+        "ln_x": P(pa + (d,), pn + ("embed",), init="ones"),
+        "w_out": P(pa + (d, d), pn + ("heads", "embed")),
+    }
+    for z in _MIX:
+        tm[f"mu_{z}"] = P(pa + (d,), pn + ("embed",), init="zeros")
+        tm[f"lora_a_{z}"] = P(pa + (d, LORA_R), pn + ("embed", None))
+        tm[f"lora_b_{z}"] = P(pa + (LORA_R, d), pn + (None, "embed"),
+                              init="zeros")
+        if z != "w":
+            tm[f"w_{z}"] = P(pa + (d, d), pn + ("embed", "heads"))
+    cm = {
+        "mu_k": P(pa + (d,), pn + ("embed",), init="zeros"),
+        "mu_r": P(pa + (d,), pn + ("embed",), init="zeros"),
+        "w_k": P(pa + (d, f), pn + ("embed", "ffn")),
+        "w_v": P(pa + (f, d), pn + ("ffn", "embed")),
+        "w_r": P(pa + (d, d), pn + ("embed", "embed_out")),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def _token_shift(x, x_prev):
+    """x: (B, T, d); x_prev: (B, d) last token of the previous segment.
+    Returns the previous-token tensor aligned with x."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, sx, z: str):
+    """Data-dependent lerp (RWKV-6): mix x with shifted sx."""
+    xx = sx - x
+    inner = x + xx * p["mu_x"]
+    lora = jnp.tanh(inner @ p[f"lora_a_{z}"]) @ p[f"lora_b_{z}"]
+    return x + xx * (p[f"mu_{z}"] + lora)
+
+
+def wkv6_scan_ref(r, k, v, w, u):
+    """Sequential oracle.  r,k,v,w: (B, T, H, hs); u: (H, hs) bonus.
+    Returns (o (B,T,H,hs), final state (B,H,hs,hs))."""
+    B, T, H, hs = r.shape
+    s0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp          # (B, H, hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,hs,hs)
+        o = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, o
+
+    rr, kk, vv, ww = (jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                      for t in (r, k, v, w))
+    s, o = jax.lax.scan(step, s0, (rr, kk, vv, ww))
+    return jnp.moveaxis(o, 0, 1), s
+
+
+def rwkv6_time_mix(p, x, cfg, *, x_prev=None, state=None,
+                   policy: Optional[Policy] = None,
+                   use_pallas: bool = False):
+    """x: (B, T, d).  Returns (out, (new_x_prev, new_state))."""
+    B, T, d = x.shape
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    sx = _token_shift(x, x_prev)
+
+    xw = _ddlerp(p, x, sx, "w")
+    xk = _ddlerp(p, x, sx, "k")
+    xv = _ddlerp(p, x, sx, "v")
+    xr = _ddlerp(p, x, sx, "r")
+    xg = _ddlerp(p, x, sx, "g")
+
+    r = (xr @ p["w_r"]).reshape(B, T, H, hs)
+    k = (xk @ p["w_k"]).reshape(B, T, H, hs)
+    v = (xv @ p["w_v"]).reshape(B, T, H, hs)
+    g = jax.nn.silu(xg @ p["w_g"])
+    dec = p["w0"] + jnp.tanh(xw @ p["lora_a_w"]) @ p["lora_b_w"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(B, T, H, hs)
+    u = p["u"].reshape(H, hs)
+
+    if state is not None:
+        # decode / segment continuation: fold initial state in via the scan
+        o, new_state = _wkv_with_state(r, k, v, w, u, state)
+    elif use_pallas:
+        from repro.kernels import ops as kops
+        o, new_state = kops.wkv6(r, k, v, w, u)
+    else:
+        o, new_state = wkv6_scan_ref(r, k, v, w, u)
+
+    o = o.reshape(B, T, d).astype(x.dtype)
+    o = rms_norm(o.reshape(B, T, H, hs), jnp.ones((hs,), x.dtype)
+                 ).reshape(B, T, d) * p["ln_x"]
+    if policy is not None:
+        o = policy.acts(o, "embeds")
+    out = (o * g) @ p["w_out"]
+    return out, (x[:, -1], new_state)
+
+
+def _wkv_with_state(r, k, v, w, u, s0):
+    B, T, H, hs = r.shape
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        o = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, o
+
+    rr, kk, vv, ww = (jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                      for t in (r, k, v, w))
+    s, o = jax.lax.scan(step, s0.astype(jnp.float32), (rr, kk, vv, ww))
+    return jnp.moveaxis(o, 0, 1), s
+
+
+def rwkv6_channel_mix(p, x, cfg, *, x_prev=None):
+    """Squared-ReLU channel mix with simple token-shift lerp."""
+    B, T, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    sx = _token_shift(x, x_prev)
+    xx = sx - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (kk @ p["w_v"]), x[:, -1]
+
+
+def init_rwkv_cache(cfg, n_layers: int, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    return {
+        "tm_x": jnp.zeros((n_layers, batch, d), dtype),
+        "cm_x": jnp.zeros((n_layers, batch, d), dtype),
+        "state": jnp.zeros((n_layers, batch, H, hs, hs), jnp.float32),
+    }
+
+

@@ -1,0 +1,66 @@
+"""Adafactor (Shazeer & Stern, 2018): factored second moments — the default
+for arctic-480b, whose full Adam fp32 state would not fit one pod's HBM.
+Params with ndim ≥ 2 store row/col factor vectors instead of a full second
+moment (the two trailing dims are factored; leading stack dims ride along),
+so state is ~1 % of Adam's."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer
+
+__all__ = ["adafactor"]
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    def init(params):
+        def state_for(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "factors": jax.tree.map(state_for, params,
+                                    is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] /
+                    jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None],
+                                eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v)
+                new_s = {"v": v}
+            u = g / jnp.maximum(denom, eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        is_leaf = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = jax.tree.flatten(state["factors"], is_leaf=is_leaf)[0]
+        flat_p = jax.tree.leaves(params)
+        new = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (tdef.unflatten([n[0] for n in new]),
+                {"factors": tdef.unflatten([n[1] for n in new]),
+                 "step": step})
+
+    return Optimizer(init=init, update=update, name="adafactor")

@@ -1,0 +1,66 @@
+"""AdamW with fp32 state over bf16 params (functional, pytree-native)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "Optimizer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+    name: str = "optimizer"
+
+
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        else:
+            scale = 1.0
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / (1 - b1 ** step.astype(jnp.float32))
+            vh = v / (1 - b2 ** step.astype(jnp.float32))
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        flat_p = jax.tree.leaves(params)
+        new = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([n[0] for n in new])
+        new_state = {
+            "m": tdef.unflatten([n[1] for n in new]),
+            "v": tdef.unflatten([n[2] for n in new]),
+            "step": step,
+        }
+        return new_p, new_state
+
+    return Optimizer(init=init, update=update, name="adamw")

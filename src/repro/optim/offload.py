@@ -1,0 +1,85 @@
+"""Optimizer-state host offload — the paper's technique at training scale.
+
+HMPP's ``advancedload``/``delegatestore`` become memory-kind transfers:
+optimizer state lives in ``pinned_host`` memory and is streamed to the
+device right before the update (advancedload, overlapped by XLA with the
+backward pass) and streamed back after (delegatestore, overlapped with the
+next step's forward).  Concretely this is just a sharding transform — the
+jitted step's in/out shardings for the optimizer state carry
+``memory_kind="pinned_host"`` and XLA inserts the transfers.
+
+``offload_shardings`` converts a device sharding tree; ``plan_step_program``
+builds the equivalent explicit block-``Program`` (host update blocks +
+device compute blocks) so the offload schedule can be *inspected* with the
+paper's emitter and counted by the executor — used in tests and the
+train-overlap benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core import Program
+
+__all__ = ["offload_shardings", "offloaded_optimizer", "plan_step_program"]
+
+
+def offload_shardings(sharding_tree):
+    return jax.tree.map(
+        lambda s: s.with_memory_kind("pinned_host"), sharding_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+
+
+def _to_space(tree, space):
+    return jax.tree.map(
+        lambda x: jax.device_put(x, space)
+        if hasattr(x, "ndim") and x.ndim > 0 else x, tree)
+
+
+def offloaded_optimizer(opt):
+    """Wrap an Optimizer so its state lives in host memory: the update
+    streams state in (advancedload — XLA overlaps it with the backward
+    pass that produces the grads) and the new state back out
+    (delegatestore, overlapped with the next forward)."""
+    def update(grads, state, params):
+        state_dev = _to_space(state, jax.memory.Space.Device)
+        new_p, new_s = opt.update(grads, state_dev, params)
+        return new_p, _to_space(new_s, jax.memory.Space.Host)
+
+    return dataclasses.replace(opt, update=update,
+                               name=opt.name + "+offload")
+
+
+def plan_step_program(n_steps: int = 4) -> Program:
+    """A miniature training loop as a block program: host data producer,
+    device fwd/bwd codelet, device optimizer update reading offloaded state,
+    host metric logging — the planner hoists the batch upload (prefetch) and
+    sinks the metric download (lazy fetch), exactly the schedule train.py
+    implements with real arrays."""
+    import numpy as np
+
+    p = Program("train_loop")
+    p.bind("w", np.zeros((64, 64), np.float32))
+    p.bind("opt_m", np.zeros((64, 64), np.float32))
+    p.bind("seed", np.zeros((2,), np.float32))
+
+    p.host(lambda xp, seed: {"batch": xp.outer(seed + 1.0,
+                                               xp.ones(64, xp.float32))},
+           reads=("seed",), writes=("batch",), name="next_batch")
+    with p.loop(n_steps):
+        p.offload(lambda xp, w, batch:
+                  {"grad": (w @ batch.T @ batch) / 64.0,
+                   "loss": ((batch @ w) ** 2).sum(keepdims=True)[:1]},
+                  reads=("w", "batch"), writes=("grad", "loss"),
+                  name="fwd_bwd")
+        p.offload(lambda xp, w, grad, opt_m:
+                  {"w": w - 0.1 * (0.9 * opt_m + grad),
+                   "opt_m": 0.9 * opt_m + grad},
+                  reads=("w", "grad", "opt_m"), writes=("w", "opt_m"),
+                  name="opt_update")
+    p.host(lambda xp, loss: {"final_loss": loss},
+           reads=("loss",), writes=("final_loss",), name="log_metrics")
+    p.set_outputs("final_loss", "w")
+    return p

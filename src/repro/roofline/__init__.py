@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from .analysis import (HW, analytic_hbm_bytes, analytic_model_flops,
+                       collective_bytes, dot_flops, parse_hlo,
+                       roofline_terms)
+
+__all__ = ["HW", "analytic_hbm_bytes", "analytic_model_flops",
+           "collective_bytes", "dot_flops", "parse_hlo", "roofline_terms"]

@@ -1,0 +1,343 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE, so a scanned
+48-layer model under-reports FLOPs ~50×.  This module parses the compiled
+(post-SPMD, per-device) HLO text into its computation graph, recovers every
+while loop's trip count from its condition computation, and propagates
+multipliers through while/call/fusion/conditional edges.  With that:
+
+  * collective bytes  — result-shape bytes of every all-reduce/all-gather/
+    reduce-scatter/all-to-all/collective-permute × its loop multiplier
+    (exact, since we count shapes ourselves);
+  * HLO dot FLOPs     — 2 × result_elems × contraction_size for every
+    dot/convolution × multiplier (covers ≈all model FLOPs; elementwise ops
+    excluded, documented);
+  * memory traffic    — an analytic HBM model (params/grads/optimizer/
+    activations incl. remat recompute, or KV-cache reads for decode),
+    because fusion-internal traffic is not recoverable from HLO text.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "parse_hlo", "collective_bytes", "dot_flops",
+           "analytic_model_flops", "analytic_hbm_bytes", "roofline_terms"]
+
+HW = {
+    "peak_flops_bf16": 197e12,   # per chip
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->")
+
+
+@dataclasses.dataclass
+class HloModule:
+    computations: Dict[str, List[str]]
+    entry: str
+    multipliers: Dict[str, float]
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_hlo(hlo: str) -> HloModule:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{"):
+                m = _HEADER_RE.match(stripped)
+                if m:
+                    cur = m.group(1).lstrip("%")
+                    comps[cur] = []
+                    if stripped.startswith("ENTRY"):
+                        entry = cur
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+
+    # while edges: parent -> (body, trip);  call edges: parent -> callee ×1
+    trip_of_cond: Dict[str, int] = {}
+    while_edges: List[Tuple[str, str, str]] = []   # (parent, cond, body)
+    call_edges: List[Tuple[str, str]] = []
+    for name, lines in comps.items():
+        for ln in lines:
+            mw = re.search(
+                r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+                ln)
+            if mw:
+                while_edges.append((name, mw.group(1), mw.group(2)))
+                continue
+            for mc in re.finditer(r"(?:calls|to_apply|branch_computations)="
+                                  r"\{?%?([\w.\-]+(?:, ?%?[\w.\-]+)*)\}?",
+                                  ln):
+                for callee in re.split(r",\s*%?", mc.group(1)):
+                    call_edges.append((name, callee))
+
+    for parent, cond, body in while_edges:
+        consts = []
+        for ln in comps.get(cond, ()):
+            consts += [int(c) for c in re.findall(r"constant\((\d+)\)", ln)]
+        trip_of_cond[body] = max(consts) if consts else 1
+
+    # propagate multipliers from entry
+    mult: Dict[str, float] = {}
+    if entry is None:
+        entry = next(iter(comps))
+    stack = [(entry, 1.0)]
+    children: Dict[str, List[Tuple[str, float]]] = {}
+    for parent, cond, body in while_edges:
+        children.setdefault(parent, []).append(
+            (body, float(trip_of_cond.get(body, 1))))
+        children.setdefault(parent, []).append((cond, 1.0))
+    for parent, callee in call_edges:
+        children.setdefault(parent, []).append((callee, 1.0))
+    seen = set()
+    while stack:
+        name, m = stack.pop()
+        if m > mult.get(name, 0.0):
+            mult[name] = m
+        key = (name, m)
+        if key in seen:
+            continue
+        seen.add(key)
+        for child, factor in children.get(name, ()):
+            if child in comps:
+                stack.append((child, m * factor))
+    return HloModule(computations=comps, entry=entry, multipliers=mult)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(mod: HloModule) -> Dict[str, Dict[str, float]]:
+    """Per-type collective traffic in RING-VOLUME bytes (the wire cost a
+    bidirectional-ring algorithm moves per participant):
+
+        all-reduce        2·(n−1)/n · tensor           (result printed = tensor)
+        all-gather        (n−1)/n  · gathered          (result = gathered)
+        reduce-scatter    (n−1)/n  · pre-reduce        (result = shard → ×n)
+        all-to-all        (n−1)/n  · tensor
+        collective-permute  1      · tensor
+
+    n is parsed from ``replica_groups=[g,n]<=[...]``; ``bytes_result`` keeps
+    the raw result-shape accounting for reference."""
+    stats = {c: {"count": 0.0, "bytes": 0.0, "bytes_result": 0.0}
+             for c in _COLLECTIVES}
+    for name, lines in mod.computations.items():
+        m = mod.multipliers.get(name, 0.0)
+        if m <= 0:
+            continue
+        for ln in lines:
+            rhs = ln.split("=", 1)
+            if len(rhs) != 2:
+                continue
+            rhs = rhs[1]
+            for c in _COLLECTIVES:
+                if re.search(rf"\b{c}(-start)?\(", rhs):
+                    result = rhs.split(c)[0]
+                    rbytes = _shape_bytes(result)
+                    gm = _GROUPS_RE.search(rhs)
+                    n = int(gm.group(2)) if gm else 2
+                    n = max(n, 2)
+                    if c == "all-reduce":
+                        wire = 2.0 * (n - 1) / n * rbytes
+                    elif c == "all-gather":
+                        wire = (n - 1) / n * rbytes
+                    elif c == "reduce-scatter":
+                        wire = (n - 1) * rbytes      # result is the shard
+                    elif c == "all-to-all":
+                        wire = (n - 1) / n * rbytes
+                    else:
+                        wire = rbytes
+                    stats[c]["count"] += m
+                    stats[c]["bytes"] += m * wire
+                    stats[c]["bytes_result"] += m * rbytes
+                    break
+    return stats
+
+
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+
+
+def _symbol_shapes(lines: List[str]) -> Dict[str, List[int]]:
+    """name -> result dims for every instruction in a computation (this HLO
+    dialect prints operand *names* only, so shapes must be looked up)."""
+    table: Dict[str, List[int]] = {}
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        sm = _SHAPE_RE.search(m.group(2))
+        if sm:
+            table[m.group(1)] = [int(d) for d in sm.group(2).split(",")
+                                 if d]
+    return table
+
+
+def dot_flops(mod: HloModule) -> float:
+    """2 × result_elems × contraction_size for every dot, × multiplier.
+    Operand shapes resolved through the computation's symbol table."""
+    total = 0.0
+    for name, lines in mod.computations.items():
+        m = mod.multipliers.get(name, 0.0)
+        if m <= 0:
+            continue
+        table = _symbol_shapes(lines)
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im or " dot(" not in im.group(2):
+                continue
+            rhs = im.group(2)
+            sm = _SHAPE_RE.search(rhs)
+            if not sm:
+                continue
+            res_elems = 1
+            for d in sm.group(2).split(","):
+                if d:
+                    res_elems *= int(d)
+            contract = 1
+            ops = re.search(r"dot\((%[\w.\-]+),\s*(%[\w.\-]+)\)", rhs)
+            mcd = re.search(r"rhs_contracting_dims=\{([\d,]*)\}", rhs)
+            if ops and mcd:
+                rhs_dims = table.get(ops.group(2))
+                if rhs_dims:
+                    for ci in mcd.group(1).split(","):
+                        if ci:
+                            contract *= rhs_dims[int(ci)]
+            total += m * 2.0 * res_elems * contract
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Analytic terms
+# ---------------------------------------------------------------------------
+
+def analytic_model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS per the assignment: 6·N·D (dense) / 6·N_active·D (MoE),
+    plus the causal-attention term 6·B·S²·H·d_h per attn layer (halved for
+    causality, ×2 window fraction for local attention).  Decode shapes:
+    D = one token per sequence, attention reads the full cache."""
+    from repro.configs import active_param_count
+    n_active = active_param_count(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        tokens = B          # one new token per sequence
+        attn_ctx = S        # attends over the whole cache
+    else:
+        tokens = B * S
+        attn_ctx = S / 2    # causal average context
+    flops = 6.0 * n_active * tokens
+    if shape.kind != "train":
+        flops /= 3.0        # forward only
+    # attention score/value FLOPs (not in 6ND)
+    kinds = cfg.layer_kinds()
+    n_attn = sum(1 for k in kinds if k == "attn")
+    if n_attn and cfg.n_heads:
+        ctx = attn_ctx
+        if cfg.local_window:
+            ctx = min(ctx, cfg.local_window)
+        per_tok = 2 * 2 * cfg.n_heads * cfg.d_head * ctx  # qk^T + pv
+        mult = 3.0 if shape.kind == "train" else 1.0
+        flops += mult * n_attn * tokens * per_tok
+    return flops
+
+
+def analytic_hbm_bytes(cfg, shape, n_devices: int, *,
+                       grad_accum: int = 1, remat_factor: float = 2.0,
+                       kv_bytes: int = 2) -> float:
+    """Per-device HBM traffic model (documented in EXPERIMENTS.md):
+
+    train:  params (fwd read + bwd read, bf16) × grad_accum
+            + grads (fp32 write+read) + AdamW m,v (fp32 r+w each)
+            + activations: layers × local_tokens × d_model × 2B ×
+              (fwd w + fwd r + remat recompute + bwd r/w ≈ 6) × remat_factor
+    decode: params read once + KV cache read (+ small write) per token.
+    """
+    from repro.configs import param_count
+    n = param_count(cfg)
+    p_local = n / n_devices
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers
+    if shape.kind == "decode":
+        kinds = cfg.layer_kinds()
+        n_attn = sum(1 for k in kinds if k == "attn")
+        ctx = min(S, cfg.local_window) if cfg.local_window else S
+        kv_traffic = (n_attn * B * ctx * cfg.n_kv_heads * cfg.d_head
+                      * 2 * kv_bytes)            # k+v read per step
+        state_bytes = 0.0
+        if cfg.layer_pattern == "rwkv":
+            H = d // cfg.rwkv_head_size
+            state_bytes = L * B * H * cfg.rwkv_head_size ** 2 * 4 * 2
+        if cfg.layer_pattern == "griffin":
+            n_rec = sum(1 for k in kinds if k == "rglru")
+            state_bytes = n_rec * B * d * 4 * 2
+        return p_local * 2 + (kv_traffic + state_bytes) / n_devices
+    tokens_local = B * S / n_devices
+    act = L * tokens_local * d * 2 * 6 * remat_factor
+    if shape.kind == "prefill":
+        return p_local * 2 + act / 3.0
+    param_traffic = p_local * (2 * 2 * grad_accum   # fwd+bwd reads / mb
+                               + 4 + 4              # grad write+read fp32
+                               + 16 + 2)            # m,v r/w fp32 + w write
+    return param_traffic + act
+
+
+def roofline_terms(cfg, shape, n_devices: int, hlo_text: str, *,
+                   grad_accum: int = 1, kv_bytes: int = 2
+                   ) -> Dict[str, object]:
+    mod = parse_hlo(hlo_text)
+    colls = collective_bytes(mod)
+    coll_total = sum(v["bytes"] for v in colls.values())
+    hlo_f = dot_flops(mod)                    # per device
+    model_f = analytic_model_flops(cfg, shape)
+    mem_b = analytic_hbm_bytes(cfg, shape, n_devices,
+                               grad_accum=grad_accum, kv_bytes=kv_bytes)
+    t_compute = hlo_f / HW["peak_flops_bf16"]
+    t_memory = mem_b / HW["hbm_bw"]
+    t_coll = coll_total / HW["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=lambda k: terms[k])
+    step_time = max(t_compute, t_memory, t_coll)
+    ideal = model_f / (n_devices * HW["peak_flops_bf16"])
+    return {
+        **terms,
+        "bottleneck": bottleneck,
+        "model_flops": model_f,
+        "hlo_flops_per_device": hlo_f,
+        "useful_ratio": model_f / max(hlo_f * n_devices, 1.0),
+        "roofline_fraction": ideal / max(step_time, 1e-30),
+        "collectives": colls,
+        "hbm_bytes_per_device": mem_b,
+    }

@@ -1,0 +1,225 @@
+"""Multi-device tests that need XLA_FLAGS device-count forcing — each runs
+in a subprocess so the main pytest process keeps its single CPU device."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def run_py(body: str, timeout=560):
+    code = ("import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            "'--xla_force_host_platform_device_count=8'\n"
+            + textwrap.dedent(body))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout,
+                       env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_small_mesh_dryrun_train_and_decode():
+    out = run_py("""
+        import jax
+        from repro.configs import get_config, reduced, ShapeSpec
+        from repro.launch.mesh import make_mesh
+        from repro.launch.steps import build_cell
+        mesh = make_mesh((2, 4), ("data", "model"))
+        for arch in ["internlm2-20b", "qwen3-moe-30b-a3b",
+                     "recurrentgemma-2b", "rwkv6-3b"]:
+            cfg = reduced(get_config(arch))
+            for sh in [ShapeSpec("t", "train", 64, 8),
+                       ShapeSpec("d", "decode", 64, 8)]:
+                cell = build_cell(cfg, sh, mesh)
+                with mesh:
+                    c = cell.lower().compile()
+                assert c.memory_analysis().temp_size_in_bytes > 0
+        print("DRYRUN_SMALL_OK")
+    """)
+    assert "DRYRUN_SMALL_OK" in out
+
+
+def test_multipod_mesh_small():
+    out = run_py("""
+        import jax
+        from repro.configs import get_config, reduced, ShapeSpec
+        from repro.launch.mesh import make_mesh
+        from repro.launch.steps import build_cell
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        cfg = reduced(get_config("internlm2-20b"))
+        cell = build_cell(cfg, ShapeSpec("t", "train", 64, 8), mesh)
+        with mesh:
+            c = cell.lower().compile()
+        txt = c.as_text()
+        assert "all-" in txt or "collective" in txt
+        print("MULTIPOD_OK")
+    """)
+    assert "MULTIPOD_OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """The distributed train step computes the same loss as the
+    un-sharded one (GSPMD correctness check)."""
+    out = run_py("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_config, reduced, ShapeSpec
+        from repro.launch.mesh import make_mesh
+        from repro.launch.steps import build_cell, input_specs
+        from repro.models import Transformer
+        from repro.optim import default_optimizer
+        cfg = reduced(get_config("internlm2-20b"))
+        mesh = make_mesh((2, 4), ("data", "model"))
+        shape = ShapeSpec("t", "train", 32, 8)
+        cell = build_cell(cfg, shape, mesh)
+        with mesh:
+            fn = cell.jitted()
+        model = Transformer(cfg)
+        params = model.init(jax.random.key(0))
+        opt = default_optimizer(cfg)
+        opt_state = opt.init(params)
+        rng = np.random.default_rng(0)
+        batch = {
+          "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)),
+                                jnp.int32),
+          "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)),
+                                jnp.int32),
+        }
+        with mesh:
+            _, _, metrics = fn(params, opt_state, batch)
+        sharded_loss = float(metrics["loss"])
+        ref_loss = float(model.loss(params, batch)[0])
+        assert abs(sharded_loss - ref_loss) < 5e-3, (sharded_loss, ref_loss)
+        print("SHARDED_MATCH_OK", sharded_loss, ref_loss)
+    """)
+    assert "SHARDED_MATCH_OK" in out
+
+
+def test_pipeline_forward_oracle():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.distributed.pipeline import pipeline_forward
+        mesh = make_mesh((4, 2), ("pod", "data"))
+        rng = np.random.default_rng(0)
+        W = jnp.asarray(rng.standard_normal((4, 16, 16)).astype(np.float32)
+                        * 0.3)
+        x = jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32))
+        layer = lambda w, mb: jnp.tanh(mb @ w)
+        run = pipeline_forward(mesh, layer, n_microbatches=4)
+        with mesh:
+            y = run(W, x)
+        ref = x
+        for i in range(4):
+            ref = jnp.tanh(ref @ W[i])
+        assert float(jnp.max(jnp.abs(y - ref))) < 1e-5
+        print("PIPELINE_OK")
+    """)
+    assert "PIPELINE_OK" in out
+
+
+def test_compressed_psum_and_error_feedback():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.distributed.collectives import (psum_compressed,
+                                                   ErrorFeedback)
+        mesh = make_mesh((4, 2), ("pod", "data"))
+        rng = np.random.default_rng(1)
+        g = jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))
+        with mesh:
+            out = shard_map(lambda x: psum_compressed(x, "pod"), mesh=mesh,
+                            in_specs=(P("pod"),), out_specs=P("pod"),
+                            check_rep=False)(g)
+        ref = jnp.broadcast_to(g.sum(axis=0), (4, 256))
+        rel = float(jnp.max(jnp.abs(out - ref)) /
+                    (jnp.max(jnp.abs(ref)) + 1e-9))
+        assert rel < 0.02, rel
+
+        # error feedback: compressed-SGD converges like exact on quadratic
+        def compress(x):
+            from repro.distributed.collectives import (quantize_int8,
+                                                       dequantize_int8)
+            q, s = quantize_int8(x)
+            return dequantize_int8(q, s)
+        w = jnp.ones((64,)) * 5.0
+        w_exact = jnp.ones((64,)) * 5.0
+        err = ErrorFeedback.init({"w": w})
+        for _ in range(200):
+            comp, err = ErrorFeedback.apply({"w": 2 * w}, err, compress)
+            w = w - 0.01 * comp["w"]
+            w_exact = w_exact - 0.01 * (2 * w_exact)
+        # compressed + error feedback tracks the exact trajectory
+        gap = float(jnp.max(jnp.abs(w - w_exact)))
+        assert gap < 5e-3, gap
+        print("COLLECTIVES_OK")
+    """)
+    assert "COLLECTIVES_OK" in out
+
+
+def test_elastic_remesh_checkpoint_restore():
+    """Save under an 8-device sharded layout, restore under a DIFFERENT
+    mesh shape — the elastic-rescale path."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.checkpoint import CheckpointManager
+        tmp = tempfile.mkdtemp()
+        mesh_a = make_mesh((4, 2), ("data", "model"))
+        tree = {"w": jax.device_put(
+            jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+            NamedSharding(mesh_a, P("data", "model")))}
+        mgr = CheckpointManager(tmp)
+        mgr.save(1, tree, blocking=True)
+        mesh_b = make_mesh((2, 4), ("data", "model"))
+        sh_b = {"w": NamedSharding(mesh_b, P("model", None))}
+        restored, _ = mgr.restore(1, tree, sh_b)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+        assert restored["w"].sharding.spec == P("model", None)
+        print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in out
+
+
+def test_ep_moe_matches_gspmd_moe():
+    """The expert-parallel shard_map MoE (§Perf, 19× collective win) must
+    agree with the GSPMD einsum MoE when capacity never drops."""
+    out = run_py("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.launch.mesh import make_mesh
+        from repro.models import Transformer
+        from repro.distributed import make_rules, MeshPolicy
+        mesh = make_mesh((2, 4), ("data", "model"))
+        cfg = dataclasses.replace(
+            reduced(get_config("qwen3-moe-30b-a3b")),
+            capacity_factor=1000.0)
+        rng = np.random.default_rng(0)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)),
+                                  jnp.int32)}
+        params = Transformer(cfg).init(jax.random.key(0))
+        loss_ref = float(Transformer(cfg).loss(params, batch)[0])
+        policy = MeshPolicy(make_rules(mesh, "train"), cfg)
+        m_ep = Transformer(cfg, moe_ep=True)
+        with mesh:
+            loss_ep = float(jax.jit(
+                lambda p, b: m_ep.loss(p, b, policy)[0])(params, batch))
+            g = jax.jit(jax.grad(
+                lambda p: m_ep.loss(p, batch, policy)[0]))(params)
+        gn = sum(float(jnp.sum(jnp.square(x))) for x in jax.tree.leaves(g))
+        assert abs(loss_ref - loss_ep) < 5e-3, (loss_ref, loss_ep)
+        assert np.isfinite(gn) and gn > 0
+        print("EP_MOE_OK")
+    """)
+    assert "EP_MOE_OK" in out

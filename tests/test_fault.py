@@ -1,0 +1,61 @@
+"""Fault-tolerance machinery: heartbeat, watchdog, elastic decisions,
+retry supervision."""
+import pytest
+
+from repro.runtime import (ElasticController, FaultInjector, Heartbeat,
+                           StepWatchdog, run_with_retries)
+
+
+def test_heartbeat_dead_host_detection():
+    hb = Heartbeat(timeout=5.0)
+    hb.tick("h0", now=100.0)
+    hb.tick("h1", now=100.0)
+    hb.tick("h0", now=109.0)
+    assert hb.dead_hosts(now=110.0) == ["h1"]
+    assert hb.live_hosts(now=110.0) == ["h0"]
+
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(factor=2.0)
+    for h in ("h0", "h1", "h2", "h3"):
+        wd.record(h, 1.0)
+    wd.record("h2", 5.0)
+    assert wd.stragglers() == ["h2"]
+
+
+def test_watchdog_no_false_positive():
+    wd = StepWatchdog(factor=2.0)
+    for h in ("h0", "h1"):
+        wd.record(h, 1.0)
+    assert wd.stragglers() == []
+
+
+def test_elastic_controller_shrinks_data_axis():
+    ec = ElasticController(chips_per_host=4, model_axis=16)
+    d = ec.decide(n_live_hosts=128)         # 512 chips
+    assert d.mesh_shape == (32, 16)
+    d = ec.decide(n_live_hosts=100)         # 400 chips -> data 16 (pow2)
+    assert d.mesh_shape == (16, 16)
+    with pytest.raises(RuntimeError):
+        ec.decide(n_live_hosts=2)
+
+
+def test_run_with_retries():
+    inj = FaultInjector((0, 1))
+    calls = []
+
+    def train_fn(_):
+        step = len(calls)
+        calls.append(step)
+        inj.maybe_fail(step)
+        return 99
+
+    final, restarts = run_with_retries(train_fn, max_restarts=3)
+    assert final == 99 and restarts == 2
+
+
+def test_run_with_retries_exhausted():
+    def always_fail(_):
+        raise RuntimeError("boom")
+    with pytest.raises(RuntimeError):
+        run_with_retries(always_fail, max_restarts=2)

@@ -1,0 +1,99 @@
+"""Property-based tests (hypothesis): random block programs through the
+planner/executor must satisfy the system invariants:
+
+  1. execute(optimized) == execute(naive) == pure-host oracle
+  2. transfers(optimized) ≤ transfers(naive)  (counts, per category)
+  3. plans are valid: the checking executor raises on any read from a
+     space without a valid copy — so mere successful execution is the
+     validity proof.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import execute, naive_plan, plan, run_host_oracle, Program
+
+VARS = ["a", "b", "c", "d", "e"]
+
+
+def _mk_op(kind):
+    if kind == 0:
+        return lambda xp, x: {"_": x * 1.5 + 0.25}
+    if kind == 1:
+        return lambda xp, x: {"_": xp.tanh(x)}
+    return lambda xp, x, y: {"_": x + 0.5 * y}
+
+
+@st.composite
+def programs(draw):
+    n_blocks = draw(st.integers(2, 7))
+    p = Program("prop")
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+    n_init = draw(st.integers(1, 3))
+    live = VARS[:n_init]
+    for v in live:
+        p.bind(v, rng.standard_normal(8).astype(np.float32))
+    loop_open = False
+    for i in range(n_blocks):
+        # maybe open/close a single-level loop
+        action = draw(st.integers(0, 5))
+        if not loop_open and action == 0:
+            ctx = p.loop(draw(st.integers(2, 4)))
+            ctx.__enter__()
+            loop_open = True
+            ctx_obj = ctx
+        elif loop_open and action == 1:
+            ctx_obj.__exit__(None, None, None)
+            loop_open = False
+        kind = draw(st.integers(0, 2))
+        fn = _mk_op(kind)
+        n_in = 2 if kind == 2 else 1
+        reads = tuple(draw(st.sampled_from(live)) for _ in range(n_in))
+        if kind == 2 and reads[0] == reads[1]:
+            reads = (reads[0],)
+            fn = _mk_op(0)
+        write = draw(st.sampled_from(VARS))
+        host = draw(st.booleans())
+
+        def wrapped(xp, __fn=fn, __names=reads, **kw):
+            vals = [kw[n] for n in __names]
+            if len(vals) == 1:
+                return {"_": __fn(xp, vals[0])["_"]}
+            return {"_": __fn(xp, *vals)["_"]}
+
+        def named(xp, __w=write, __wrapped=wrapped, **kw):
+            return {__w: __wrapped(xp, **kw)["_"]}
+
+        if host:
+            p.host(named, reads=reads, writes=(write,), name=f"h{i}")
+        else:
+            p.offload(named, reads=reads, writes=(write,), name=f"k{i}")
+        if write not in live:
+            live.append(write)
+    if loop_open:
+        ctx_obj.__exit__(None, None, None)
+    p.set_outputs(*live)
+    return p
+
+
+@settings(max_examples=60, deadline=None)
+@given(programs())
+def test_optimized_equals_naive_equals_oracle(p):
+    oracle = run_host_oracle(p)
+    out_opt, s_opt = execute(plan(p))          # check=True validates plan
+    out_nv, s_nv = execute(naive_plan(p))
+    for k in p.outputs:
+        np.testing.assert_allclose(out_opt[k], oracle[k], rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(out_nv[k], oracle[k], rtol=1e-5,
+                                   atol=1e-5)
+    assert s_opt.h2d_transfers <= s_nv.h2d_transfers
+    assert s_opt.d2h_transfers <= s_nv.d2h_transfers
+
+
+@settings(max_examples=30, deadline=None)
+@given(programs())
+def test_transfer_bytes_monotone(p):
+    _, s_opt = execute(plan(p))
+    _, s_nv = execute(naive_plan(p))
+    assert s_opt.h2d_bytes <= s_nv.h2d_bytes
+    assert s_opt.d2h_bytes <= s_nv.d2h_bytes

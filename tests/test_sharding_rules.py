@@ -1,0 +1,76 @@
+"""Sharding-rule unit tests (no forced device count needed: rules are pure
+functions of a mesh we can build abstractly via jax.sharding.Mesh over the
+single CPU device is impossible — so we use AbstractMesh)."""
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec
+
+from repro.configs import get_config
+from repro.distributed.sharding import (ShardingRules, batch_axes,
+                                        make_rules, spec_for_axes)
+
+
+def _mesh(shape=(16, 16), axes=("data", "model")):
+    return AbstractMesh(shape, axes)
+
+
+def test_divisibility_guard_drops_heads():
+    """qwen2.5's 40 q-heads can't shard on a 16-way model axis."""
+    rules = make_rules(_mesh(), "train")
+    spec = spec_for_axes(rules, (5120, 40, 128),
+                         ("embed", "heads", "head_dim"), "w_q")
+    assert spec == PartitionSpec("data", None, None)
+    assert any(d[1] == "heads" for d in rules.dropped)
+
+
+def test_divisible_heads_shard():
+    rules = make_rules(_mesh(), "train")
+    spec = spec_for_axes(rules, (6144, 48, 128),
+                         ("embed", "heads", "head_dim"), "w_q")
+    assert spec == PartitionSpec("data", "model", None)
+
+
+def test_experts_shard_on_model():
+    rules = make_rules(_mesh(), "train")
+    spec = spec_for_axes(rules, (128, 2048, 768),
+                         ("experts", "embed", "ffn"), "w_up")
+    # experts take model; ffn would also want model but it's used
+    assert spec == PartitionSpec("model", "data", None)
+
+
+def test_axis_used_only_once():
+    rules = make_rules(_mesh(), "train")
+    spec = spec_for_axes(rules, (16384, 6144), ("ffn", "embed"), "w_down")
+    assert spec == PartitionSpec("model", "data")
+    spec2 = spec_for_axes(rules, (16384, 16384), ("ffn", "vocab"), "x")
+    assert spec2 == PartitionSpec("model", None)  # vocab→model already used
+
+
+def test_fsdp_layers_mode_prefers_layer_dim():
+    rules = make_rules(_mesh(), "train", fsdp_layers=True)
+    spec = spec_for_axes(rules, (48, 6144, 16384),
+                         ("layers", "embed", "ffn"), "stacked")
+    assert spec == PartitionSpec("data", None, "model")
+
+
+def test_serve_rules_no_fsdp():
+    rules = make_rules(_mesh(), "decode")
+    spec = spec_for_axes(rules, (6144, 48, 128),
+                         ("embed", "heads", "head_dim"), "w_q")
+    assert spec == PartitionSpec(None, "model", None)
+
+
+def test_batch_axes_multipod():
+    assert batch_axes(_mesh((2, 16, 16), ("pod", "data", "model"))) == \
+        ("pod", "data")
+    assert batch_axes(_mesh()) == ("data",)
+
+
+def test_long500k_batch1_replicates():
+    from repro.distributed.sharding import batch_specs
+    import jax
+    rules = make_rules(_mesh(), "decode")
+    cfg = get_config("rwkv6-3b")
+    specs = batch_specs(rules, cfg, "decode",
+                        {"tokens": jax.ShapeDtypeStruct((1,), np.int32)})
+    assert specs["tokens"].spec == PartitionSpec(None)

@@ -17,7 +17,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import execute, naive_plan, plan, run_host_oracle
-from repro.core.executor import _jitted
+from repro.core.backend import _jitted_block as _jitted
 from repro.polybench import PROBLEMS, build
 
 SIZES = {

@@ -4,14 +4,21 @@ Public API:
     Program          — block/loop program builder (the "pragma'd source")
     analyze          — jaxpr def/use + liveness analysis (paper §2)
     plan             — optimized directive placement (advancedload ASAP,
-                       delegatestore ALAP, noupdate, groups, async+sync)
+                       delegatestore ALAP, noupdate, groups, async+sync,
+                       per-group transfer streams)
     naive_plan       — the paper's baseline policy (Figs. 4a/5a)
-    execute          — instrumented two-space executor
+    execute          — instrumented driver over pluggable backends;
+                       mode="interpreted" | "compiled"
+    compile_plan     — lower a Plan to a fused jit-compiled schedule
+    Backend et al.   — the execution backends (numpy / jax / pinned)
     run_host_oracle  — pure-host reference semantics
     emit             — HMPP-style generated source (paper Table 2)
     DeviceResidency  — runtime residency tracker for the training substrates
 """
 from .analysis import ProgramAnalysis, analyze
+from .backend import (Backend, Event, JaxDeviceBackend, NumpyHostBackend,
+                      PinnedHostBackend, get_backend, register_backend)
+from .compile import CompiledPlan, compile_plan
 from .emitter import emit
 from .executor import ExecStats, PlanExecutionError, execute, run_host_oracle
 from .ir import (AdvancedLoad, Block, BlockKind, Callsite, DelegateStore,
@@ -26,5 +33,8 @@ __all__ = [
     "GroupDecl",
     "ProgramAnalysis", "analyze", "plan", "naive_plan", "transfer_summary",
     "execute", "run_host_oracle", "ExecStats", "PlanExecutionError",
+    "compile_plan", "CompiledPlan",
+    "Backend", "Event", "NumpyHostBackend", "JaxDeviceBackend",
+    "PinnedHostBackend", "get_backend", "register_backend",
     "emit", "DeviceResidency", "ResidencyStats",
 ]

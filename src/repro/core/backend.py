@@ -1,0 +1,322 @@
+"""Pluggable execution backends for the plan runtime.
+
+The paper's generated HMPP code targets a CPU+GPU pair with asynchronous
+queues; our executor used to hard-code "host = numpy, device = default JAX
+device, every transfer blocks".  This module factors that choice out into a
+``Backend`` protocol — alloc/upload/download/launch/sync plus per-stream
+events — so the same ``Plan`` can run against:
+
+``NumpyHostBackend``
+    Both spaces are numpy.  Transfers are copies, launches run the block
+    body with ``numpy``.  Useful for validating plans (the residency
+    discipline is still enforced by the driver) without touching JAX.
+
+``JaxDeviceBackend``
+    Device space is the default JAX device.  ``upload`` is an async
+    ``jax.device_put`` enqueued on one of ``n_streams`` logical transfer
+    streams (double-buffered by default), launches are jitted and dispatch
+    asynchronously, and ``sync(stream)`` is a *real* wait point: it blocks
+    on every event outstanding on that stream.  Optional buffer donation
+    for fused launches.
+
+``PinnedHostBackend``
+    Same as ``JaxDeviceBackend`` but the host side of every transfer is
+    staged in ``pinned_host`` device memory when the platform supports it
+    (see ``repro.optim.offload.host_memory_kind``), which is what makes
+    h2d genuinely overlappable on TPU.  Falls back to plain
+    ``JaxDeviceBackend`` behaviour on platforms without a pinned space
+    (e.g. CPU jaxlib builds).
+
+Streams are logical ids chosen by the planner (``AdvancedLoad.stream``
+etc.); a backend may map many logical streams onto fewer physical ones
+(``stream % n_streams``).  Stream 0 is the compute stream by convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Backend", "Event", "NumpyHostBackend", "JaxDeviceBackend",
+    "PinnedHostBackend", "get_backend", "register_backend",
+]
+
+
+@dataclasses.dataclass
+class Event:
+    """Completion handle for an async backend operation.
+
+    ``payload`` is whatever must be ready before the op is complete (a
+    jax.Array for device backends, nothing for numpy).  ``wait()`` is
+    idempotent.
+    """
+    payload: Any = None
+    _done: bool = False
+
+    def wait(self) -> None:
+        if self._done:
+            return
+        if self.payload is not None and hasattr(self.payload,
+                                                "block_until_ready"):
+            try:
+                self.payload.block_until_ready()
+            except RuntimeError:
+                pass   # buffer deleted/donated since: nothing left to wait on
+        self._done = True
+
+
+class Backend:
+    """Protocol for plan-execution backends (duck-typed; subclass for the
+    shared stream bookkeeping).
+
+    Handles returned by ``upload``/``launch`` are opaque to the driver; it
+    only stores them in slots and passes them back in.
+    """
+
+    name: str = "abstract"
+    n_streams: int = 2   # logical transfer streams (double-buffered)
+
+    def __init__(self) -> None:
+        self._pending: Dict[int, List[Event]] = {}
+
+    @property
+    def xp(self):
+        """Array namespace block bodies run under (numpy or jax.numpy)."""
+        raise NotImplementedError
+
+    # -- stream/event bookkeeping (shared) ---------------------------------
+    _MAX_PENDING = 64     # per stream; oldest events are drained past this
+
+    def _stream_of(self, stream: int) -> int:
+        """Logical → physical stream.  Stream 0 (compute) is reserved;
+        transfer streams 1..∞ fold onto the backend's 1..n_streams so
+        they never collide with the compute queue."""
+        if stream <= 0:
+            return 0
+        return 1 + (stream - 1) % max(self.n_streams, 1)
+
+    def _record(self, stream: int, ev: Event) -> Event:
+        q = self._pending.setdefault(self._stream_of(stream), [])
+        q.append(ev)
+        # bound the queue so callers that never sync (e.g. a residency
+        # prefetch loop) don't pin every in-flight array forever
+        while len(q) > self._MAX_PENDING:
+            q.pop(0).wait()
+        return ev
+
+    def sync(self, stream: Optional[int] = None) -> None:
+        """Block until every event on ``stream`` (or all streams) is done."""
+        keys = (list(self._pending) if stream is None
+                else [self._stream_of(stream)])
+        for k in keys:
+            for ev in self._pending.pop(k, ()):
+                ev.wait()
+
+    def track(self, handle: Any, *, stream: int = 0) -> Any:
+        """Register an externally produced handle (e.g. a fused-launch
+        output) so a later ``sync(stream)`` waits on it."""
+        self._record(stream, Event(payload=handle))
+        return handle
+
+    # -- memory ------------------------------------------------------------
+    def alloc(self, shape: Tuple[int, ...], dtype) -> Any:
+        """Fresh zero device buffer (used for pruned/dead block inputs)."""
+        raise NotImplementedError
+
+    def upload(self, host: np.ndarray, *, stream: int = 0) -> Any:
+        """h2d: returns a device handle; completion tracked on ``stream``."""
+        raise NotImplementedError
+
+    def download(self, handle: Any, *, stream: int = 0) -> np.ndarray:
+        """d2h: returns a host ndarray (a wait point for ``handle``)."""
+        raise NotImplementedError
+
+    def free(self, handle: Any) -> None:
+        """Release a device handle (HMPP ``release``).  Events waiting on
+        the handle are retired first so a later ``sync`` never blocks on
+        a deleted buffer."""
+        for q in self._pending.values():
+            for ev in q:
+                if ev.payload is handle:
+                    ev.payload, ev._done = None, True
+
+    # -- compute -----------------------------------------------------------
+    def launch(self, fn: Callable[..., Dict[str, Any]],
+               names: Sequence[str], writes: Sequence[str],
+               args: Sequence[Any], *, stream: int = 0) -> Tuple[Any, ...]:
+        """Run one offload block body; returns device handles for
+        ``writes`` in order.  Dispatch may be asynchronous."""
+        raise NotImplementedError
+
+    def compile_fused(self, fused_fn: Callable[..., Tuple[Any, ...]],
+                      donate_argnums: Tuple[int, ...] = ()
+                      ) -> Callable[..., Tuple[Any, ...]]:
+        """Lower a fused segment function (see ``core.compile``) to this
+        backend's compiled form.  ``donate_argnums`` marks inputs the
+        caller will not reuse; backends may ignore it.  Default: eager."""
+        return fused_fn
+
+
+class NumpyHostBackend(Backend):
+    """Both memory spaces are numpy; the device is simulated with copies so
+    residency bugs (reading a stale space) still surface as wrong counts."""
+
+    name = "numpy"
+
+    @property
+    def xp(self):
+        return np
+
+    def alloc(self, shape, dtype):
+        return np.zeros(shape, dtype)
+
+    def upload(self, host, *, stream: int = 0):
+        handle = np.array(host, copy=True)
+        self._record(stream, Event(payload=None, _done=True))
+        return handle
+
+    def download(self, handle, *, stream: int = 0):
+        return np.array(handle, copy=True)
+
+    def launch(self, fn, names, writes, args, *, stream: int = 0):
+        out = fn(np, **dict(zip(names, args)))
+        self._record(stream, Event(payload=None, _done=True))
+        return tuple(np.asarray(out[w]) for w in writes)
+
+    def compile_fused(self, fused_fn, donate_argnums=()):
+        return fused_fn            # no tracing: eager numpy
+
+
+@functools.lru_cache(maxsize=512)
+def _jitted_block(fn, names: Tuple[str, ...], writes: Tuple[str, ...]):
+    import jax
+    import jax.numpy as jnp
+
+    def wrapped(*arrays):
+        out = fn(jnp, **dict(zip(names, arrays)))
+        return tuple(out[w] for w in writes)
+    return jax.jit(wrapped)
+
+
+class JaxDeviceBackend(Backend):
+    """Default JAX device space, async transfers on logical streams."""
+
+    name = "jax"
+
+    def __init__(self, device=None, *, n_streams: int = 2,
+                 donate: bool = False):
+        super().__init__()
+        import jax
+        self._jax = jax
+        self._device = device if device is not None else jax.devices()[0]
+        self.n_streams = n_streams
+        self.donate = donate
+
+    @property
+    def xp(self):
+        import jax.numpy as jnp
+        return jnp
+
+    # host-side staging sharding for transfers; None = plain device_put
+    def _host_space(self):
+        return None
+
+    def alloc(self, shape, dtype):
+        import jax.numpy as jnp
+        return jnp.zeros(shape, dtype)
+
+    def upload(self, host, *, stream: int = 0):
+        handle = self._jax.device_put(host, self._device)   # async dispatch
+        self._record(stream, Event(payload=handle))
+        return handle
+
+    def download(self, handle, *, stream: int = 0):
+        staged = self._host_space()
+        if staged is not None:
+            handle = self._jax.device_put(handle, staged)
+        return np.asarray(handle)                           # wait point
+
+    def free(self, handle) -> None:
+        super().free(handle)       # retire events waiting on this buffer
+        if hasattr(handle, "delete"):
+            try:
+                handle.delete()
+            except Exception:
+                pass   # buffer may be donated/shared; dropping the ref wins
+
+    def launch(self, fn, names, writes, args, *, stream: int = 0):
+        outs = _jitted_block(fn, tuple(names), tuple(writes))(*args)
+        for o in outs:
+            self._record(stream, Event(payload=o))
+        return outs
+
+    def compile_fused(self, fused_fn, donate_argnums=()):
+        if donate_argnums and self.donate:
+            return self._jax.jit(fused_fn, donate_argnums=donate_argnums)
+        return self._jax.jit(fused_fn)
+
+
+class PinnedHostBackend(JaxDeviceBackend):
+    """JAX backend whose transfers stage through ``pinned_host`` memory —
+    the ``optim/offload.py`` machinery applied to the block executor.  On
+    platforms with no pinned space this degrades to ``JaxDeviceBackend``
+    (the logical plan semantics are unchanged either way)."""
+
+    name = "pinned"
+
+    def __init__(self, device=None, *, n_streams: int = 2,
+                 donate: bool = False):
+        super().__init__(device, n_streams=n_streams, donate=donate)
+        from repro.optim.offload import host_memory_kind
+        kind = host_memory_kind(self._device)
+        self._pinned_sharding = None
+        if kind is not None:
+            self._pinned_sharding = (
+                self._jax.sharding.SingleDeviceSharding(self._device)
+                .with_memory_kind(kind))
+
+    def _host_space(self):
+        return self._pinned_sharding
+
+    def upload(self, host, *, stream: int = 0):
+        if self._pinned_sharding is not None:
+            host = self._jax.device_put(host, self._pinned_sharding)
+        return super().upload(host, stream=stream)
+
+
+_REGISTRY: Dict[str, Callable[[], Backend]] = {
+    "numpy": NumpyHostBackend,
+    "jax": JaxDeviceBackend,
+    "pinned": PinnedHostBackend,
+}
+
+
+def register_backend(name: str, factory: Callable[[], Backend]) -> None:
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+_INSTANCES: Dict[str, Backend] = {}
+
+
+def get_backend(spec: Any = None) -> Backend:
+    """Resolve a backend: an instance passes through; ``None`` or a
+    registered name returns a memoized process-wide instance — so jit
+    caches and compiled-plan lowerings are reused across ``execute``
+    calls no matter how the backend was named."""
+    if isinstance(spec, Backend):
+        return spec
+    if spec is None:
+        spec = "jax"
+    if spec not in _INSTANCES:
+        try:
+            factory = _REGISTRY[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {spec!r}; have "
+                f"{sorted(_REGISTRY)}") from None
+        _INSTANCES[spec] = factory()
+    return _INSTANCES[spec]

@@ -1,0 +1,326 @@
+"""Plan → compiled schedule lowering.
+
+The interpreter in ``executor.py`` re-dispatches every directive and block
+through Python each time it is reached — a loop body with three codelets
+costs three jit-call boundaries plus directive dispatch *per iteration*.
+This module lowers a ``Plan`` once into a **compiled schedule**:
+
+* Maximal runs of offload blocks and their transfer directives (no host
+  blocks, no loop boundaries, no ``Release``) become a ``_Segment``.
+* Each segment's blocks are traced together into ONE fused function and
+  compiled by the backend (``jax.jit`` for device backends) a single
+  time; loop iterations re-enter the compiled code.  Uploads stay outside
+  the trace (they are real h2d transfers, counted per execution, enqueued
+  async on the directive's stream); the values a ``DelegateStore``
+  captures mid-segment are threaded out as extra fused outputs so the
+  download sees exactly the value at the store's program point.
+* Host blocks, loops and ``Release`` fall back to the interpreter's
+  primitives.
+
+Contract (tested): for any plan, ``execute(p, mode="compiled")`` returns
+bitwise-identical outputs to ``execute(p, mode="interpreted")`` on the
+same backend, with identical *logical* ``ExecStats`` transfer counts —
+only wall-time fields (and ``fused_launches``) differ.
+
+A segment is split before an ``AdvancedLoad`` whose variable an earlier
+op in the same segment dirtied — stored (the upload must observe the
+host value the download produced) or block-wrote (the interpreter
+rejects the now-stale host copy, and so must we) — since the driver
+issues every upload before the fused launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .backend import Backend
+from .executor import (ExecStats, PlanExecutionError, _Slot, _nest,
+                       _run_block, do_load, do_release, do_store, do_sync,
+                       dummy_arg)
+from .ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, GroupDecl,
+                 Plan, PlanOp, Program, Release, Synchronize)
+
+__all__ = ["compile_plan", "CompiledPlan"]
+
+
+# --------------------------------------------------------------------------
+# Segment representation.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Segment:
+    """A fused run of directives + offload blocks.
+
+    ``items`` is the ordered lowering of the run:
+        ('load',  AdvancedLoad, load_index)
+        ('store', DelegateStore, store_index)
+        ('sync',  Synchronize)
+        ('block', block_idx)
+    ``arg_spec`` describes the fused function's positional arguments:
+        ('entry', var)   device value resident at segment entry
+        ('load',  i)     the handle uploaded by load #i this execution
+        ('dummy', var)   zeros for a pruned (dead) declared read
+    """
+    items: List[Tuple]
+    arg_spec: List[Tuple[str, Any]]
+    blocks: List[int]
+    n_stores: int
+    final_writes: Tuple[str, ...]
+    fused: Optional[Callable[..., Tuple[Any, ...]]] = None
+
+
+def _build_segment(run: List[PlanOp], program: Program) -> _Segment:
+    items: List[Tuple] = []
+    arg_spec: List[Tuple[str, Any]] = []
+    arg_index: Dict[Tuple[str, Any], int] = {}
+    defined: set = set()          # vars bound inside the trace
+    blocks: List[int] = []
+    writes_order: List[str] = []
+    n_loads = n_stores = 0
+
+    def argpos(key: Tuple[str, Any]) -> int:
+        if key not in arg_index:
+            arg_index[key] = len(arg_spec)
+            arg_spec.append(key)
+        return arg_index[key]
+
+    def need(var: str) -> None:
+        if var not in defined:
+            argpos(("entry", var))
+            defined.add(var)
+
+    for op in run:
+        if op.kind == "directive":
+            d = op.directive
+            if isinstance(d, AdvancedLoad):
+                argpos(("load", n_loads))
+                items.append(("load", d, n_loads))
+                defined.add(d.var)
+                n_loads += 1
+            elif isinstance(d, DelegateStore):
+                need(d.var)
+                items.append(("store", d, n_stores))
+                n_stores += 1
+            elif isinstance(d, Synchronize):
+                items.append(("sync", d))
+            # GroupDecl / Callsite are metadata: dropped from the lowering
+        else:
+            blk = program.blocks[op.block_idx]
+            actual = set(blk.effective_reads())
+            for v in blk.reads:
+                if v in actual:
+                    need(v)
+                else:
+                    argpos(("dummy", v))
+            items.append(("block", blk.idx))
+            blocks.append(blk.idx)
+            for w in blk.writes:
+                defined.add(w)
+                if w not in writes_order:
+                    writes_order.append(w)
+
+    return _Segment(items=items, arg_spec=arg_spec, blocks=blocks,
+                    n_stores=n_stores, final_writes=tuple(writes_order))
+
+
+def _make_fused(seg: _Segment, program: Program, xp):
+    """The traced body: replays the segment symbolically; returns the
+    store-captured values followed by the final device value of every
+    block-written variable."""
+    entry_pos = {k[1]: i for i, k in enumerate(seg.arg_spec)
+                 if k[0] == "entry"}
+    load_pos = {k[1]: i for i, k in enumerate(seg.arg_spec)
+                if k[0] == "load"}
+    dummy_pos = {k[1]: i for i, k in enumerate(seg.arg_spec)
+                 if k[0] == "dummy"}
+
+    def fused(*args):
+        env = {v: args[i] for v, i in entry_pos.items()}
+        stores: List[Any] = [None] * seg.n_stores
+        for it in seg.items:
+            if it[0] == "load":
+                env[it[1].var] = args[load_pos[it[2]]]
+            elif it[0] == "block":
+                blk = program.blocks[it[1]]
+                actual = set(blk.effective_reads())
+                kwargs = {v: (env[v] if v in actual
+                              else args[dummy_pos[v]])
+                          for v in blk.reads}
+                out = blk.fn(xp, **kwargs)
+                for w in blk.writes:
+                    env[w] = out[w]
+            elif it[0] == "store":
+                stores[it[2]] = env[it[1].var]
+        return tuple(stores) + tuple(env[v] for v in seg.final_writes)
+
+    return fused
+
+
+def _donatable(seg: _Segment) -> Tuple[int, ...]:
+    """Args safe to donate: device inputs whose variable the segment
+    rewrites — after the fused call the driver only keeps the new value."""
+    rewritten = set(seg.final_writes)
+    out = []
+    for i, (tag, v) in enumerate(seg.arg_spec):
+        if tag == "entry" and v in rewritten:
+            out.append(i)
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# Lowering: plan tree -> schedule of host blocks / segments / loops.
+# --------------------------------------------------------------------------
+
+def _lower(tree, program: Program, be: Backend) -> List[Tuple]:
+    schedule: List[Tuple] = []
+    run: List[PlanOp] = []
+    # vars whose host copy an in-segment op has changed (DelegateStore) or
+    # invalidated (a block write): a later AdvancedLoad of such a var must
+    # start a new segment, because the driver issues every upload before
+    # the fused launch and would otherwise read the pre-segment host value
+    # (or silently accept a host copy the interpreter rejects as stale)
+    dirty_vars: set = set()
+
+    def flush() -> None:
+        nonlocal run, dirty_vars
+        if run:
+            seg = _build_segment(run, program)
+            if seg.blocks:
+                fused = _make_fused(seg, program, be.xp)
+                seg.fused = be.compile_fused(fused, _donatable(seg))
+            schedule.append(("seg", seg))
+        run, dirty_vars = [], set()
+
+    for item in tree:
+        if item[0] == "loop":
+            flush()
+            _, loop_id, body = item
+            schedule.append(("loop", loop_id, _lower(body, program, be)))
+            continue
+        op: PlanOp = item[1]
+        if op.kind == "block":
+            blk = program.blocks[op.block_idx]
+            if blk.kind is BlockKind.HOST:
+                flush()
+                schedule.append(("host", blk.idx))
+            else:
+                run.append(op)
+                dirty_vars.update(blk.writes)
+            continue
+        d = op.directive
+        if isinstance(d, Release):
+            flush()
+            schedule.append(("release",))
+        elif isinstance(d, (GroupDecl, Callsite)):
+            continue
+        elif isinstance(d, AdvancedLoad) and d.var in dirty_vars:
+            flush()          # upload must see the in-segment host state
+            run.append(op)
+        else:
+            if isinstance(d, DelegateStore):
+                dirty_vars.add(d.var)
+            run.append(op)
+    flush()
+    return schedule
+
+
+# --------------------------------------------------------------------------
+# Compiled plan driver.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledPlan:
+    plan: Plan
+    backend: Backend
+    schedule: List[Tuple]
+
+    def run(self, env: Dict[str, _Slot], stats: ExecStats,
+            check: bool) -> None:
+        self._run_schedule(self.schedule, env, stats, check)
+
+    def _run_schedule(self, schedule, env, stats, check) -> None:
+        program = self.plan.program
+        be = self.backend
+        for item in schedule:
+            kind = item[0]
+            if kind == "loop":
+                for _ in range(program.loops[item[1]].n_iters):
+                    self._run_schedule(item[2], env, stats, check)
+            elif kind == "host":
+                _run_block(program, item[1], env, stats, check, be)
+            elif kind == "release":
+                do_release(env, be)
+            else:
+                self._run_segment(item[1], env, stats, check)
+
+    def _run_segment(self, seg: _Segment, env, stats: ExecStats,
+                     check: bool) -> None:
+        be = self.backend
+        # 1. issue every upload (async, on its directive's stream) --------
+        load_handles: Dict[int, Any] = {}
+        for it in seg.items:
+            if it[0] == "load":
+                load_handles[it[2]] = do_load(it[1], env, stats, be)
+
+        if not seg.blocks:
+            # pure transfer/sync segment: no compute to fuse
+            for it in seg.items:
+                if it[0] == "sync":
+                    do_sync(it[1], stats, be)
+                elif it[0] == "store":
+                    do_store(it[1], env, stats, be)
+            return
+
+        # 2. gather fused args --------------------------------------------
+        args: List[Any] = []
+        for tag, v in seg.arg_spec:
+            if tag == "load":
+                args.append(load_handles[v])
+                continue
+            slot = env.setdefault(v, _Slot())
+            if tag == "dummy":
+                args.append(dummy_arg(slot, be))
+                continue
+            if not slot.valid_device:
+                if check:
+                    raise PlanExecutionError(
+                        f"compiled segment reads {v!r}: not on device "
+                        f"(missing advancedload)")
+                slot.device = be.upload(slot.host)
+                slot.valid_device = True
+            args.append(slot.device)
+
+        # 3. one fused launch for the whole segment -----------------------
+        t = time.perf_counter()
+        outs = seg.fused(*args)
+        stats.kernel_time += time.perf_counter() - t
+        stats.kernel_calls += len(seg.blocks)   # logical count parity
+        stats.fused_launches += 1
+        for o in outs:
+            be.track(o, stream=0)
+        store_vals = outs[:seg.n_stores]
+        final_map = dict(zip(seg.final_writes, outs[seg.n_stores:]))
+
+        # 4. replay directives/flags in program order ---------------------
+        for it in seg.items:
+            if it[0] == "sync":
+                do_sync(it[1], stats, be)
+            elif it[0] == "store":
+                do_store(it[1], env, stats, be, handle=store_vals[it[2]])
+            elif it[0] == "block":
+                blk = self.plan.program.blocks[it[1]]
+                for w in blk.writes:
+                    slot = env.setdefault(w, _Slot())
+                    slot.device = final_map[w]
+                    slot.valid_device, slot.valid_host = True, False
+
+
+def compile_plan(p: Plan, backend: Backend) -> CompiledPlan:
+    """Lower ``p`` for ``backend``; segments are traced/compiled lazily on
+    first call by the backend's compiler (``jax.jit`` caches thereafter)."""
+    tree = _nest(p.ops, p.program)
+    schedule = _lower(tree, p.program, backend)
+    return CompiledPlan(plan=p, backend=backend, schedule=schedule)

@@ -84,7 +84,8 @@ def emit(plan: Plan) -> str:
                             f"CPU write */")
                 w(f"#pragma hmpp <group{d.group}> advancedload, "
                   f"args[{d.var}]"
-                  + (", asynchronous" if d.asynchronous else "") + note)
+                  + (", asynchronous" if d.asynchronous else "")
+                  + (f", stream={d.stream}" if d.stream else "") + note)
             elif isinstance(d, DelegateStore):
                 note = ""
                 if d.hoisted_from:
@@ -92,7 +93,8 @@ def emit(plan: Plan) -> str:
                             f"{list(d.hoisted_from)} — ALAP before first "
                             f"CPU read */")
                 w(f"#pragma hmpp <group{d.group}> delegatedstore, "
-                  f"args[{d.var}]" + note)
+                  f"args[{d.var}]"
+                  + (f", stream={d.stream}" if d.stream else "") + note)
             elif isinstance(d, Callsite):
                 blk = prog.blocks[d.block_idx]
                 extra = ""
@@ -107,7 +109,8 @@ def emit(plan: Plan) -> str:
             elif isinstance(d, Synchronize):
                 blk = prog.blocks[d.block_idx] if d.block_idx >= 0 else None
                 lbl = blk.label if blk else "<emergency>"
-                w(f"#pragma hmpp <group{d.group}> {lbl} synchronize")
+                w(f"#pragma hmpp <group{d.group}> {lbl} synchronize"
+                  + (f", stream={d.stream}" if d.stream else ""))
             elif isinstance(d, Release):
                 w(f"#pragma hmpp <group{d.group}> release")
 

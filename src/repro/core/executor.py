@@ -1,27 +1,40 @@
-"""Plan executor: two memory spaces, instrumented transfers.
+"""Plan executor: a thin driver over pluggable backends.
 
-The paper's generated HMPP code runs on CPU+GPU; here "host" is numpy (or a
-``pinned_host``-memory jax.Array — see ``optim/offload.py`` for that mode)
-and "device" is the default JAX device space.  The executor walks a ``Plan``,
-runs host blocks with numpy, offload blocks as jitted JAX functions, and
-performs transfers ONLY where the plan says so — transfer counts/bytes/wall
-times are recorded, which is exactly what the paper's Figs. 4-6 measure.
+The paper's generated HMPP code runs on CPU+GPU; here "host" is numpy and
+"device" is whatever ``Backend`` the caller picks (``repro.core.backend``):
+the default JAX device space, a ``pinned_host``-staged variant, or a pure
+numpy simulation.  The driver walks a ``Plan``, runs host blocks with
+numpy, dispatches offload blocks and transfers through the backend ONLY
+where the plan says so — transfer counts/bytes/wall times are recorded,
+which is exactly what the paper's Figs. 4-6 measure.
 
-The executor also *verifies* the plan: reading a variable from a space with
-no valid copy raises ``PlanExecutionError`` (the property tests drive random
-programs through this).
+Two execution modes:
+
+``mode="interpreted"``
+    Walk the plan tree op by op (the original semantics; every directive
+    is dispatched through Python each time it is reached).
+
+``mode="compiled"``
+    Lower the plan once via ``repro.core.compile``: runs of offload blocks
+    and their directives become fused segments whose bodies are traced and
+    jitted a single time, so loop iterations re-enter compiled code
+    instead of the Python dispatch loop.  Outputs are bitwise-identical to
+    interpreted mode and the *logical* transfer counts in ``ExecStats``
+    match; only the wall-time fields change (that is the point).
+
+The driver also *verifies* the plan: reading a variable from a space with
+no valid copy raises ``PlanExecutionError`` (the property tests drive
+random programs through this).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from .backend import Backend, get_backend
 from .ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, GroupDecl,
                  Plan, PlanOp, Program, Release, Synchronize)
 
@@ -38,9 +51,10 @@ class ExecStats:
     h2d_bytes: int = 0
     d2h_transfers: int = 0
     d2h_bytes: int = 0
-    kernel_calls: int = 0
+    kernel_calls: int = 0       # logical block launches (also in compiled)
     host_calls: int = 0
     syncs: int = 0
+    fused_launches: int = 0     # compiled mode: actual jit invocations
     h2d_time: float = 0.0
     d2h_time: float = 0.0
     kernel_time: float = 0.0
@@ -51,31 +65,42 @@ class ExecStats:
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
+    def transfer_counts(self) -> Dict[str, int]:
+        """The mode-invariant logical schedule: what the plan *did*."""
+        return {"h2d_transfers": self.h2d_transfers,
+                "h2d_bytes": self.h2d_bytes,
+                "d2h_transfers": self.d2h_transfers,
+                "d2h_bytes": self.d2h_bytes,
+                "kernel_calls": self.kernel_calls,
+                "host_calls": self.host_calls,
+                "syncs": self.syncs}
+
 
 @dataclasses.dataclass
 class _Slot:
     host: Optional[np.ndarray] = None
-    device: Optional[jax.Array] = None
+    device: Optional[Any] = None          # backend-opaque handle
     valid_host: bool = False
     valid_device: bool = False
 
 
 def _nbytes(x) -> int:
-    return int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
-
-
-@functools.lru_cache(maxsize=512)
-def _jitted(fn, names: Tuple[str, ...], writes: Tuple[str, ...]):
-    def wrapped(*arrays):
-        out = fn(jnp, **dict(zip(names, arrays)))
-        return tuple(out[w] for w in writes)
-    return jax.jit(wrapped)
+    return int(np.prod(np.shape(x))) * np.dtype(x.dtype).itemsize
 
 
 def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
-            *, check: bool = True
+            *, check: bool = True, mode: str = "interpreted",
+            backend: Any = None
             ) -> Tuple[Dict[str, np.ndarray], ExecStats]:
-    """Run the plan; return (program outputs on host, stats)."""
+    """Run the plan; return (program outputs on host, stats).
+
+    ``mode`` is "interpreted" or "compiled"; ``backend`` is a
+    ``Backend`` instance, a registered name ("jax", "pinned", "numpy"),
+    or None for the default JAX device backend.
+    """
+    if mode not in ("interpreted", "compiled"):
+        raise ValueError(f"unknown execution mode {mode!r}")
+    be = get_backend(backend)
     program = p.program
     env: Dict[str, _Slot] = {}
     stats = ExecStats()
@@ -83,15 +108,25 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
     if inputs:
         bound.update(inputs)
     for k, v in bound.items():
-        if isinstance(v, jax.ShapeDtypeStruct):
+        if type(v).__name__ == "ShapeDtypeStruct":
             raise PlanExecutionError(
                 f"program input {k!r} is abstract; pass a concrete array")
         env[k] = _Slot(host=np.asarray(v), valid_host=True)
 
-    # nest the linear ops into a tree so loops can be re-entered n times
-    tree = _nest(p.ops, program)
     t0 = time.perf_counter()
-    _run(tree, program, env, stats, check)
+    if mode == "compiled":
+        from .compile import compile_plan
+        cache = p.meta.setdefault("_compiled", {})
+        fingerprint = hash(tuple(p.ops))   # ops may be mutated by callers
+        compiled, fp = cache.get(be.name, (None, None))
+        if compiled is None or compiled.backend is not be \
+                or fp != fingerprint:
+            compiled = compile_plan(p, be)
+            cache[be.name] = (compiled, fingerprint)
+        compiled.run(env, stats, check)
+    else:
+        tree = _nest(p.ops, program)
+        _run(tree, program, env, stats, check, be)
     stats.wall_time = time.perf_counter() - t0
 
     outs = {}
@@ -104,7 +139,7 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
                 raise PlanExecutionError(
                     f"output {name!r} not on host at program end "
                     f"(missing delegatestore)")
-            slot.host = np.asarray(slot.device)
+            slot.host = be.download(slot.device)
             slot.valid_host = True
         outs[name] = slot.host
     return outs, stats
@@ -132,69 +167,95 @@ def _nest(ops: List[PlanOp], program: Program):
 
 
 def _run(tree, program: Program, env: Dict[str, _Slot], stats: ExecStats,
-         check: bool) -> None:
+         check: bool, be: Backend) -> None:
     for item in tree:
         if item[0] == "loop":
             _, loop_id, body = item
             for _ in range(program.loops[loop_id].n_iters):
-                _run(body, program, env, stats, check)
+                _run(body, program, env, stats, check, be)
             continue
         op: PlanOp = item[1]
         if op.kind == "directive":
-            _run_directive(op.directive, env, stats, check)
+            run_directive(op.directive, env, stats, check, be)
         elif op.kind == "block":
-            _run_block(program, op.block_idx, env, stats, check)
+            _run_block(program, op.block_idx, env, stats, check, be)
 
 
-def _run_directive(d, env, stats: ExecStats, check: bool) -> None:
-    if isinstance(d, AdvancedLoad):
-        slot = env.setdefault(d.var, _Slot())
-        if not slot.valid_host:
-            raise PlanExecutionError(
-                f"advancedload {d.var!r}: no valid host copy")
-        t = time.perf_counter()
-        slot.device = jnp.asarray(slot.host)
-        stats.h2d_time += time.perf_counter() - t
-        stats.h2d_transfers += 1
-        stats.h2d_bytes += _nbytes(slot.host)
-        slot.valid_device = True
-    elif isinstance(d, DelegateStore):
-        slot = env.setdefault(d.var, _Slot())
+# -- directive primitives (shared with the compiled driver) -----------------
+
+def do_load(d: AdvancedLoad, env, stats: ExecStats, be: Backend) -> Any:
+    slot = env.setdefault(d.var, _Slot())
+    if not slot.valid_host:
+        raise PlanExecutionError(
+            f"advancedload {d.var!r}: no valid host copy")
+    t = time.perf_counter()
+    slot.device = be.upload(slot.host, stream=d.stream)
+    stats.h2d_time += time.perf_counter() - t
+    stats.h2d_transfers += 1
+    stats.h2d_bytes += _nbytes(slot.host)
+    slot.valid_device = True
+    return slot.device
+
+
+def do_store(d: DelegateStore, env, stats: ExecStats, be: Backend,
+             handle: Any = None) -> None:
+    """Download; ``handle`` overrides the slot's device value (the compiled
+    driver passes the value captured at the store's program point)."""
+    slot = env.setdefault(d.var, _Slot())
+    if handle is None:
         if not slot.valid_device:
             raise PlanExecutionError(
                 f"delegatestore {d.var!r}: no valid device copy")
-        t = time.perf_counter()
-        slot.host = np.asarray(slot.device)
-        stats.d2h_time += time.perf_counter() - t
-        stats.d2h_transfers += 1
-        stats.d2h_bytes += _nbytes(slot.host)
-        slot.valid_host = True
+        handle = slot.device
+    t = time.perf_counter()
+    slot.host = be.download(handle, stream=d.stream)
+    stats.d2h_time += time.perf_counter() - t
+    stats.d2h_transfers += 1
+    stats.d2h_bytes += _nbytes(slot.host)
+    slot.valid_host = True
+
+
+def do_sync(d: Synchronize, stats: ExecStats, be: Backend) -> None:
+    t = time.perf_counter()
+    be.sync(d.stream)     # the transfer queue this callsite's group uses
+    be.sync(0)            # and the compute stream the callsite ran on
+    stats.sync_time += time.perf_counter() - t
+    stats.syncs += 1
+
+
+def do_release(env, be: Backend) -> None:
+    for slot in env.values():
+        if slot.valid_host:
+            if slot.device is not None:
+                be.free(slot.device)
+            slot.device = None
+            slot.valid_device = False
+
+
+def run_directive(d, env, stats: ExecStats, check: bool,
+                  be: Backend) -> None:
+    if isinstance(d, AdvancedLoad):
+        do_load(d, env, stats, be)
+    elif isinstance(d, DelegateStore):
+        do_store(d, env, stats, be)
     elif isinstance(d, Synchronize):
-        t = time.perf_counter()
-        for slot in env.values():
-            if slot.valid_device and slot.device is not None:
-                slot.device.block_until_ready()
-        stats.sync_time += time.perf_counter() - t
-        stats.syncs += 1
+        do_sync(d, stats, be)
     elif isinstance(d, Release):
-        for slot in env.values():
-            if slot.valid_host:
-                slot.device = None
-                slot.valid_device = False
+        do_release(env, be)
     elif isinstance(d, (GroupDecl, Callsite)):
         pass  # metadata; the following block op performs the call
 
 
-def _dummy_like(slot: _Slot, xp):
+def dummy_arg(slot: _Slot, be: Backend):
     """Placeholder for a declared-but-unread input (pruned by the analyzer);
     it is provably dead inside the block, so a zeros array of the right
     shape/dtype is passed without charging a transfer."""
     src = slot.device if slot.device is not None else slot.host
-    return xp.zeros(src.shape, src.dtype)
+    return be.alloc(np.shape(src), src.dtype)
 
 
 def _run_block(program: Program, idx: int, env: Dict[str, _Slot],
-               stats: ExecStats, check: bool) -> None:
+               stats: ExecStats, check: bool, be: Backend) -> None:
     blk = program.blocks[idx]
     actual = set(blk.effective_reads())
     if blk.kind is BlockKind.OFFLOAD:
@@ -202,19 +263,18 @@ def _run_block(program: Program, idx: int, env: Dict[str, _Slot],
         for v in blk.reads:
             slot = env.setdefault(v, _Slot())
             if v not in actual:
-                args.append(_dummy_like(slot, jnp))
+                args.append(dummy_arg(slot, be))
                 continue
             if not slot.valid_device:
                 if check:
                     raise PlanExecutionError(
                         f"codelet {blk.name!r} reads {v!r}: not on device "
                         f"(missing advancedload)")
-                slot.device = jnp.asarray(slot.host)
+                slot.device = be.upload(slot.host)
                 slot.valid_device = True
             args.append(slot.device)
-        fn = _jitted(blk.fn, tuple(blk.reads), tuple(blk.writes))
         t = time.perf_counter()
-        outs = fn(*args)
+        outs = be.launch(blk.fn, blk.reads, blk.writes, args)
         stats.kernel_time += time.perf_counter() - t
         stats.kernel_calls += 1
         for w, val in zip(blk.writes, outs):
@@ -226,14 +286,15 @@ def _run_block(program: Program, idx: int, env: Dict[str, _Slot],
         for v in blk.reads:
             slot = env.setdefault(v, _Slot())
             if v not in actual:
-                kwargs[v] = _dummy_like(slot, np)
+                src = slot.host if slot.host is not None else slot.device
+                kwargs[v] = np.zeros(np.shape(src), src.dtype)
                 continue
             if not slot.valid_host:
                 if check:
                     raise PlanExecutionError(
                         f"host block {blk.name!r} reads {v!r}: not on host "
                         f"(missing delegatestore)")
-                slot.host = np.asarray(slot.device)
+                slot.host = be.download(slot.device)
                 slot.valid_host = True
             kwargs[v] = slot.host
         t = time.perf_counter()

@@ -165,11 +165,17 @@ class Directive:
 
 @dataclasses.dataclass(frozen=True)
 class AdvancedLoad(Directive):
-    """Upload ``var`` host→device.  Placed as early as possible (Fig. 4b)."""
+    """Upload ``var`` host→device.  Placed as early as possible (Fig. 4b).
+
+    ``stream`` is the logical transfer queue the upload is enqueued on
+    (assigned per group by the planner; 0 = the compute stream).  Backends
+    map logical streams onto their physical ones.
+    """
     var: str
     group: int
     asynchronous: bool = True
     hoisted_from: Tuple[int, ...] = ()   # loop ids it was hoisted out of
+    stream: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +184,7 @@ class DelegateStore(Directive):
     var: str
     group: int
     hoisted_from: Tuple[int, ...] = ()
+    stream: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,9 +198,12 @@ class Callsite(Directive):
 
 @dataclasses.dataclass(frozen=True)
 class Synchronize(Directive):
-    """Wait for async callsite ``block_idx`` (placed before first use)."""
+    """Wait for async work on ``stream`` issued for callsite ``block_idx``
+    (placed before first use).  With a stream-aware backend this is a real
+    wait point, not a no-op."""
     block_idx: int
     group: int
+    stream: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -430,6 +430,29 @@ def _tag_noupdate(program: Program, an: ProgramAnalysis,
 
 
 # --------------------------------------------------------------------------
+# Stream assignment — one logical transfer stream per group.
+# --------------------------------------------------------------------------
+
+def _assign_streams(ops: List[PlanOp]) -> List[PlanOp]:
+    """Give every transfer/sync directive a logical stream id derived from
+    its group: stream 0 is the compute stream, groups round-robin over the
+    transfer streams 1..N so a stream-aware backend double-buffers uploads
+    of independent groups and ``Synchronize`` waits only its own queue."""
+    def stream_of(group: int) -> int:
+        return 1 + (group % 2)
+
+    out: List[PlanOp] = []
+    for op in ops:
+        d = op.directive
+        if op.kind == "directive" and isinstance(
+                d, (AdvancedLoad, DelegateStore, Synchronize)):
+            d = dataclasses.replace(d, stream=stream_of(d.group))
+            op = PlanOp("directive", directive=d)
+        out.append(op)
+    return out
+
+
+# --------------------------------------------------------------------------
 # Entry points.
 # --------------------------------------------------------------------------
 
@@ -442,6 +465,7 @@ def plan(program: Program, *, optimize: bool = True,
     ops = _simulate_and_fix(program, an, ops, naive=not optimize,
                             elide=optimize)
     ops = _tag_noupdate(program, an, ops)
+    ops = _assign_streams(ops)
 
     # group declarations up front, releases at the end (paper Table 2)
     head: List[PlanOp] = []

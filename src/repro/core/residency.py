@@ -8,6 +8,10 @@ uploads as early as the caller schedules them (``prefetch`` = advancedload),
 downloads as late as possible (``fetch`` only when the host actually reads =
 delegatestore), and no transfer at all when the requested space already holds
 a valid copy (noupdate).  All movement is instrumented.
+
+Transfers go through a pluggable ``Backend`` (``repro.core.backend``), so
+prefetches are enqueued asynchronously on a per-entry transfer stream and
+``wait()`` is a real synchronization point (HMPP ``synchronize``).
 """
 from __future__ import annotations
 
@@ -15,9 +19,9 @@ import dataclasses
 import time
 from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+from .backend import Backend, get_backend
 
 __all__ = ["DeviceResidency", "ResidencyStats"]
 
@@ -39,6 +43,7 @@ class _Entry:
     device: Optional[Any] = None
     valid_host: bool = False
     valid_device: bool = False
+    stream: int = 0
 
 
 def _leaf_bytes(x) -> int:
@@ -47,16 +52,23 @@ def _leaf_bytes(x) -> int:
 
 
 class DeviceResidency:
-    def __init__(self, device: Optional[jax.Device] = None):
+    def __init__(self, device=None, *, backend: Any = None):
         self._entries: Dict[str, _Entry] = {}
         self.stats = ResidencyStats()
-        self._device = device
+        if backend is None and device is not None:
+            from .backend import JaxDeviceBackend
+            backend = JaxDeviceBackend(device)
+        self._backend: Backend = get_backend(backend)
+        self._next_stream = 1
 
     # -- host side ---------------------------------------------------------
     def put_host(self, name: str, value: np.ndarray) -> None:
         """A host write: invalidates any device copy (paper: CPU write ⇒
         re-advancedload needed)."""
         e = self._entries.setdefault(name, _Entry())
+        if e.stream == 0:
+            e.stream = self._next_stream
+            self._next_stream += 1
         e.host = np.asarray(value)
         e.valid_host, e.valid_device = True, False
 
@@ -67,7 +79,7 @@ class DeviceResidency:
             self.stats.elided += 1
             return e.host
         t = time.perf_counter()
-        e.host = np.asarray(e.device)
+        e.host = self._backend.download(e.device, stream=e.stream)
         self.stats.d2h_time += time.perf_counter() - t
         self.stats.d2h_transfers += 1
         self.stats.d2h_bytes += _leaf_bytes(e.host)
@@ -82,14 +94,15 @@ class DeviceResidency:
         e.valid_device, e.valid_host = True, False
 
     def prefetch(self, name: str) -> None:
-        """advancedload: schedule the upload now (async under JAX) so it
-        overlaps whatever runs next; no-op if already resident."""
+        """advancedload: enqueue the upload now (async, on this entry's
+        transfer stream) so it overlaps whatever runs next; no-op if
+        already resident."""
         e = self._entries[name]
         if e.valid_device:
             self.stats.elided += 1
             return
         t = time.perf_counter()
-        e.device = jax.device_put(e.host, self._device)
+        e.device = self._backend.upload(e.host, stream=e.stream)
         self.stats.h2d_time += time.perf_counter() - t
         self.stats.h2d_transfers += 1
         self.stats.h2d_bytes += _leaf_bytes(e.host)
@@ -103,6 +116,14 @@ class DeviceResidency:
             self.prefetch(name)
         return e.device
 
+    def wait(self, name: Optional[str] = None) -> None:
+        """Block until outstanding async transfers complete (HMPP
+        ``synchronize``): one entry's stream, or every stream."""
+        if name is None:
+            self._backend.sync()
+        else:
+            self._backend.sync(self._entries[name].stream)
+
     def resident(self, name: str) -> bool:
         e = self._entries.get(name)
         return bool(e and e.valid_device)
@@ -111,5 +132,7 @@ class DeviceResidency:
         names = [name] if name else list(self._entries)
         for n in names:
             e = self._entries[n]
+            if e.device is not None:
+                self._backend.free(e.device)
             e.device = None
             e.valid_device = False

@@ -27,7 +27,19 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 __all__ = ["ShardingRules", "make_rules", "spec_for_axes", "tree_shardings",
-           "MeshPolicy", "batch_axes", "batch_specs", "cache_shardings"]
+           "MeshPolicy", "batch_axes", "batch_specs", "cache_shardings",
+           "abstract_mesh"]
+
+
+def abstract_mesh(shape=(16, 16), axes=("data", "model")):
+    """Device-less mesh for rule evaluation, across JAX versions: newer
+    ``AbstractMesh`` takes ``(axis_sizes, axis_names)``, 0.4.x takes one
+    ``((name, size), ...)`` tuple."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 # logical axis -> mesh axis (or tuple), per shape kind

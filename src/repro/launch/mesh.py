@@ -13,14 +13,22 @@ import jax
 __all__ = ["make_production_mesh", "make_mesh"]
 
 
+def _make(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; older make_mesh has no
+    # axis_types kwarg (everything is implicitly Auto there).
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Small meshes for tests (e.g. (2, 4) on 8 forced host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make(shape, axes)

@@ -8,6 +8,13 @@ next step's forward).  Concretely this is just a sharding transform — the
 jitted step's in/out shardings for the optimizer state carry
 ``memory_kind="pinned_host"`` and XLA inserts the transfers.
 
+JAX-version compatibility: the memory-space API has moved around
+(``jax.memory.Space`` is newer than some installed jaxlibs, and CPU builds
+expose no ``pinned_host`` space at all), so this module probes what the
+runtime actually supports — ``host_memory_kind()`` returns the usable host
+kind or ``None`` — and every transform degrades to an identity when host
+memory is unavailable, keeping one code path for CPU CI and TPU prod.
+
 ``offload_shardings`` converts a device sharding tree; ``plan_step_program``
 builds the equivalent explicit block-``Program`` (host update blocks +
 device compute blocks) so the offload schedule can be *inspected* with the
@@ -17,24 +24,68 @@ train-overlap benchmark.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import functools
+from typing import Any, Optional
 
 import jax
 
 from repro.core import Program
 
-__all__ = ["offload_shardings", "offloaded_optimizer", "plan_step_program"]
+__all__ = ["offload_shardings", "offloaded_optimizer", "plan_step_program",
+           "host_memory_kind", "supports_pinned_host"]
+
+_HOST_KIND = "pinned_host"
+
+
+@functools.lru_cache(maxsize=None)
+def _device_memory_kinds(device) -> tuple:
+    try:
+        return tuple(m.kind for m in device.addressable_memories())
+    except Exception:
+        return ()
+
+
+def host_memory_kind(device=None) -> Optional[str]:
+    """The host-side memory kind usable for offload on ``device``, or
+    ``None`` when the platform has no addressable host space distinct from
+    its default memory (e.g. CPU jaxlib: everything is unpinned_host)."""
+    if device is None:
+        device = jax.devices()[0]
+    return _HOST_KIND if _HOST_KIND in _device_memory_kinds(device) else None
+
+
+def supports_pinned_host(device=None) -> bool:
+    return host_memory_kind(device) is not None
+
+
+def _transfer_to(kind: str):
+    """A placement target usable inside jit, across JAX versions."""
+    space = getattr(jax, "memory", None)
+    if space is not None and hasattr(space, "Space"):
+        return space.Space.Host if kind == _HOST_KIND else space.Space.Device
+    ttmk = getattr(jax.sharding, "TransferToMemoryKind", None)
+    if ttmk is None:
+        from jax._src.sharding_impls import TransferToMemoryKind as ttmk
+    return ttmk(kind)
 
 
 def offload_shardings(sharding_tree):
+    """Move a sharding tree's memory kind to the host space; identity when
+    the platform has none (the optimizer then simply stays on device)."""
+    kind = host_memory_kind()
+    if kind is None:
+        return sharding_tree
     return jax.tree.map(
-        lambda s: s.with_memory_kind("pinned_host"), sharding_tree,
+        lambda s: s.with_memory_kind(kind), sharding_tree,
         is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
 
 
-def _to_space(tree, space):
+def _to_space(tree, kind: str):
+    if host_memory_kind() is None:
+        return tree     # single memory space: nothing to move
+    target = _transfer_to(kind)
     return jax.tree.map(
-        lambda x: jax.device_put(x, space)
+        lambda x: jax.device_put(x, target)
         if hasattr(x, "ndim") and x.ndim > 0 else x, tree)
 
 
@@ -44,9 +95,9 @@ def offloaded_optimizer(opt):
     pass that produces the grads) and the new state back out
     (delegatestore, overlapped with the next forward)."""
     def update(grads, state, params):
-        state_dev = _to_space(state, jax.memory.Space.Device)
+        state_dev = _to_space(state, "device")
         new_p, new_s = opt.update(grads, state_dev, params)
-        return new_p, _to_space(new_s, jax.memory.Space.Host)
+        return new_p, _to_space(new_s, _HOST_KIND)
 
     return dataclasses.replace(opt, update=update,
                                name=opt.name + "+offload")

@@ -5,7 +5,8 @@ import numpy as np
 
 from repro.core import (AdvancedLoad, Callsite, DelegateStore, emit,
                         execute, naive_plan, plan)
-from repro.optim import adamw, offload_shardings, plan_step_program
+from repro.optim import (adamw, host_memory_kind, offload_shardings,
+                         plan_step_program, supports_pinned_host)
 
 
 def test_train_loop_program_schedule():
@@ -36,11 +37,17 @@ def test_train_loop_results_match_oracle():
 
 
 def test_offload_shardings_memory_kind():
+    """Platforms with a pinned_host space get host-kind shardings; CPU
+    jaxlib (single memory space) degrades to the identity transform."""
     sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
     tree = {"m": sh, "v": {"x": sh}}
     off = offload_shardings(tree)
-    assert off["m"].memory_kind == "pinned_host"
-    assert off["v"]["x"].memory_kind == "pinned_host"
+    if supports_pinned_host():
+        assert off["m"].memory_kind == "pinned_host"
+        assert off["v"]["x"].memory_kind == "pinned_host"
+    else:
+        assert host_memory_kind() is None
+        assert off["m"] is sh and off["v"]["x"] is sh
 
 
 def test_offloaded_optimizer_step_compiles_and_runs():
@@ -53,27 +60,35 @@ def test_offloaded_optimizer_step_compiles_and_runs():
     opt = offloaded_optimizer(base)
     params = {"w": jnp.ones((32, 32), jnp.float32)}
     state = base.init(params)
-    dev = jax.devices()[0]
-    d_sh = jax.sharding.SingleDeviceSharding(dev)
-    h_sh = d_sh.with_memory_kind("pinned_host")
-    host_state = jax.tree.map(
-        lambda x: jax.device_put(x, h_sh) if hasattr(x, "shape") and
-        x.ndim > 0 else x, state)
-
-    state_sh = jax.tree.map(
-        lambda x: h_sh if hasattr(x, "ndim") and x.ndim > 0 else d_sh,
-        state)
-    f = jax.jit(lambda p, s, g: opt.update(g, s, p),
-                in_shardings=(d_sh, state_sh, d_sh),
-                out_shardings=(d_sh, state_sh))
     grads = {"w": jnp.full((32, 32), 0.5, jnp.float32)}
-    # the CPU backend cannot LOAD placement-annotation custom calls, so the
-    # criterion here is lowering with the host-memory annotations present
-    # (real compile+run happens on TPU; the pinned_host transfers
-    # themselves are exercised by tests above and the DeviceResidency path)
-    lowered = f.lower(params, host_state, grads)
-    hlo = lowered.as_text()
-    assert "pinned_host" in hlo or "annotate_device_placement" in hlo
+
+    if supports_pinned_host():
+        dev = jax.devices()[0]
+        d_sh = jax.sharding.SingleDeviceSharding(dev)
+        h_sh = d_sh.with_memory_kind("pinned_host")
+        host_state = jax.tree.map(
+            lambda x: jax.device_put(x, h_sh) if hasattr(x, "shape") and
+            x.ndim > 0 else x, state)
+
+        state_sh = jax.tree.map(
+            lambda x: h_sh if hasattr(x, "ndim") and x.ndim > 0 else d_sh,
+            state)
+        f = jax.jit(lambda p, s, g: opt.update(g, s, p),
+                    in_shardings=(d_sh, state_sh, d_sh),
+                    out_shardings=(d_sh, state_sh))
+        # the CPU backend cannot LOAD placement-annotation custom calls, so
+        # the criterion here is lowering with the host-memory annotations
+        # present (real compile+run happens on TPU; the pinned_host
+        # transfers themselves are exercised by the DeviceResidency path)
+        lowered = f.lower(params, host_state, grads)
+        hlo = lowered.as_text()
+        assert "pinned_host" in hlo or "annotate_device_placement" in hlo
+    else:
+        # single-memory-space platform: the offloaded update must still
+        # compile and run (identity placement), proving the fallback works
+        new_p_off, _ = jax.jit(lambda p, s, g: opt.update(g, s, p))(
+            params, state, grads)
+        assert np.isfinite(np.asarray(new_p_off["w"])).all()
 
     # numerics of the offloaded update == base update (plain placement)
     new_p, _ = jax.jit(lambda p, s, g: base.update(g, s, p))(params, state,

@@ -8,7 +8,12 @@ planner/executor must satisfy the system invariants:
      validity proof.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import execute, naive_plan, plan, run_host_oracle, Program
 

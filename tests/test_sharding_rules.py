@@ -3,15 +3,16 @@ functions of a mesh we can build abstractly via jax.sharding.Mesh over the
 single CPU device is impossible — so we use AbstractMesh)."""
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec
+from jax.sharding import PartitionSpec
 
 from repro.configs import get_config
-from repro.distributed.sharding import (ShardingRules, batch_axes,
-                                        make_rules, spec_for_axes)
+from repro.distributed.sharding import (ShardingRules, abstract_mesh,
+                                        batch_axes, make_rules,
+                                        spec_for_axes)
 
 
 def _mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes)
+    return abstract_mesh(shape, axes)
 
 
 def test_divisibility_guard_drops_heads():

@@ -11,14 +11,24 @@ synchronous); the planner sinks the store next to the first host read
 (5b), so the device result is fetched once and late (async dispatch keeps
 the host busy meanwhile).
 
-Each benchmark now reports BOTH execution modes: ``interp`` walks the
-plan op-by-op through Python, ``compiled`` runs the jit-lowered fused
-schedule (``repro.core.compile``).  The paper's effect is the opt-vs-naive
-gap; the compiled columns show it survives (and sharpens) once Python
-dispatch overhead is compiled away.
+Each benchmark reports THREE execution modes: ``interp`` walks the plan
+op-by-op through Python, ``compiled`` runs the jit-lowered fused
+schedule with per-iteration segment dispatch, and ``compiled_loop``
+additionally rolls pure-device loops whole into one ``lax.fori_loop``
+launch (``execute``'s default compiled behaviour).  The paper's effect
+is the opt-vs-naive gap; the compiled columns show it survives (and
+sharpens) once Python dispatch overhead is compiled away.
+
+All wall times are steady-state: plans are lowered and jits warmed
+before timing, and one-time lowering cost is reported separately as
+``compile_ms`` (``ExecStats.compile_time``), never folded into the
+timed columns.
+
+``--quick`` shrinks sizes for CI smoke runs.
 """
 from __future__ import annotations
 
+import sys
 import time
 from typing import Dict
 
@@ -29,6 +39,13 @@ from repro.core import Program, execute, naive_plan, plan
 N = 1536
 ITERS = 8
 REPS = 3
+
+# (column label, execute kwargs)
+MODES = (
+    ("interpreted", dict(mode="interpreted")),
+    ("compiled", dict(mode="compiled", fuse_loops=False)),
+    ("compiled_loop", dict(mode="compiled", fuse_loops=True)),
+)
 
 
 def _advancedload_prog():
@@ -72,13 +89,19 @@ def _time(fn):
 
 
 def _grid(p) -> Dict[str, float]:
-    """min wall time for {naive, opt} x {interpreted, compiled}."""
+    """Steady-state min wall time for {naive, opt} x MODES, plus the
+    one-time lowering cost per plan (compile_ms)."""
     plans = {"naive": naive_plan(p), "opt": plan(p)}
     out = {}
     for pname, pl in plans.items():
-        for mode in ("interpreted", "compiled"):
-            out[f"t_{pname}_{mode}_ms"] = _time(
-                lambda pl=pl, mode=mode: execute(pl, mode=mode)) * 1e3
+        compile_ms = 0.0
+        for label, kw in MODES:
+            # warm inside _time; first call's stats carry compile_time
+            _, s0 = execute(pl, **kw)
+            compile_ms += s0.compile_time * 1e3
+            out[f"t_{pname}_{label}_ms"] = _time(
+                lambda pl=pl, kw=kw: execute(pl, **kw)) * 1e3
+        out[f"compile_{pname}_ms"] = compile_ms
     return out
 
 
@@ -93,12 +116,17 @@ def bench_advancedload() -> Dict:
         "t_opt_ms": g["t_opt_interpreted_ms"],
         "t_naive_compiled_ms": g["t_naive_compiled_ms"],
         "t_opt_compiled_ms": g["t_opt_compiled_ms"],
+        "t_naive_compiled_loop_ms": g["t_naive_compiled_loop_ms"],
+        "t_opt_compiled_loop_ms": g["t_opt_compiled_loop_ms"],
+        "compile_opt_ms": g["compile_opt_ms"],
         "h2d_naive": s_nv.h2d_transfers, "h2d_opt": s_opt.h2d_transfers,
         "h2d_bytes_naive": s_nv.h2d_bytes, "h2d_bytes_opt": s_opt.h2d_bytes,
         "fused_launches_opt": s_opt.fused_launches,
         "speedup": g["t_naive_interpreted_ms"] / g["t_opt_interpreted_ms"],
         "speedup_compiled": (g["t_naive_compiled_ms"]
                              / g["t_opt_compiled_ms"]),
+        "speedup_loop": (g["t_opt_compiled_ms"]
+                         / g["t_opt_compiled_loop_ms"]),
     }
 
 
@@ -113,15 +141,24 @@ def bench_delegatestore() -> Dict:
         "t_opt_ms": g["t_opt_interpreted_ms"],
         "t_naive_compiled_ms": g["t_naive_compiled_ms"],
         "t_opt_compiled_ms": g["t_opt_compiled_ms"],
+        "t_naive_compiled_loop_ms": g["t_naive_compiled_loop_ms"],
+        "t_opt_compiled_loop_ms": g["t_opt_compiled_loop_ms"],
+        "compile_opt_ms": g["compile_opt_ms"],
         "d2h_naive": s_nv.d2h_transfers, "d2h_opt": s_opt.d2h_transfers,
         "fused_launches_opt": s_opt.fused_launches,
         "speedup": g["t_naive_interpreted_ms"] / g["t_opt_interpreted_ms"],
         "speedup_compiled": (g["t_naive_compiled_ms"]
                              / g["t_opt_compiled_ms"]),
+        "speedup_loop": (g["t_opt_compiled_ms"]
+                         / g["t_opt_compiled_loop_ms"]),
     }
 
 
-def main():
+def main(argv=None):
+    global N, ITERS, REPS
+    args = list(sys.argv[1:] if argv is None else argv)
+    if "--quick" in args:
+        N, ITERS, REPS = 256, 4, 1   # CI smoke: exercise every column fast
     results = []
     for bench in (bench_advancedload, bench_delegatestore):
         r = bench()

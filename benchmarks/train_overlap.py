@@ -9,9 +9,10 @@ Compares wall-clock of N training steps with
 
 ``run_plan_executor`` additionally runs the same schedule as an explicit
 block-``Program`` (``plan_step_program``) through the plan executor in
-both execution modes — the interpreted-vs-compiled columns isolate how
-much of the step loop's cost is Python directive dispatch vs the
-schedule itself.
+three execution modes — interpreted, compiled (per-iteration segment
+dispatch), and compiled+loop (the whole step loop rolled into one
+``lax.fori_loop`` launch) — isolating how much of the step loop's cost
+is Python directive dispatch vs the schedule itself.
 """
 from __future__ import annotations
 
@@ -80,26 +81,37 @@ def run(arch: str = "internlm2-20b"):
 
 
 def run_plan_executor(n_steps: int = 64, reps: int = 3):
-    """The miniature train loop as a block program, all four cells of
-    {naive, optimized} x {interpreted, compiled}."""
+    """The miniature train loop as a block program, every cell of
+    {naive, optimized} x {interpreted, compiled, compiled+loop}.  All
+    wall times are steady-state: the jits are warmed before timing and
+    one-time plan lowering is surfaced separately (``compile_ms``,
+    from ``ExecStats.compile_time``)."""
     p = plan_step_program(n_steps=n_steps)
     plans = {"naive": naive_plan(p), "opt": plan(p)}
+    modes = (("interpreted", dict(mode="interpreted")),
+             ("compiled", dict(mode="compiled", fuse_loops=False)),
+             ("compiled_loop", dict(mode="compiled", fuse_loops=True)))
     out = {"name": "train_plan_executor", "n_steps": n_steps}
+    compile_ms = 0.0
     for pname, pl in plans.items():
-        for mode in ("interpreted", "compiled"):
-            execute(pl, mode=mode)                      # warm the jits
+        for label, kw in modes:
+            _, s0 = execute(pl, **kw)                   # warm the jits
+            compile_ms += s0.compile_time * 1e3
             ts = []
             for _ in range(reps):
                 t0 = time.perf_counter()
-                execute(pl, mode=mode)
+                execute(pl, **kw)
                 ts.append(time.perf_counter() - t0)
-            out[f"t_{pname}_{mode}_ms"] = min(ts) * 1e3
+            out[f"t_{pname}_{label}_ms"] = min(ts) * 1e3
+    out["compile_ms"] = compile_ms
     out["speedup_interpreted"] = (out["t_naive_interpreted_ms"]
                                   / out["t_opt_interpreted_ms"])
     out["speedup_compiled"] = (out["t_naive_compiled_ms"]
                                / out["t_opt_compiled_ms"])
     out["compile_win_opt"] = (out["t_opt_interpreted_ms"]
                               / out["t_opt_compiled_ms"])
+    out["loop_win_opt"] = (out["t_opt_compiled_ms"]
+                           / out["t_opt_compiled_loop_ms"])
     return out
 
 

@@ -81,6 +81,7 @@ class Backend:
 
     def __init__(self) -> None:
         self._pending: Dict[int, List[Event]] = {}
+        self.loop_dispatches = 0   # fused whole-loop launches (launch_loop)
 
     @property
     def xp(self):
@@ -159,6 +160,33 @@ class Backend:
         caller will not reuse; backends may ignore it.  Default: eager."""
         return fused_fn
 
+    def launch_loop(self, body_fn: Callable[[Dict[str, Any]],
+                                            Dict[str, Any]],
+                    n_iters: int, carry: Dict[str, Any],
+                    *, stream: int = 0) -> Dict[str, Any]:
+        """Whole-loop launch: run ``carry = body_fn(carry)`` ``n_iters``
+        times as ONE backend dispatch and return the final carry.
+
+        ``carry`` maps loop-state names to device handles; ``body_fn`` is
+        pure (built by ``core.compile`` over ``self.xp``) and returns a
+        carry with the same keys plus any body-defined variables, whose
+        values stabilize in shape/dtype after the first iteration.  Device
+        backends lower this to a single jitted ``lax.fori_loop``
+        (body-defined state is zero-initialized from ``jax.eval_shape`` —
+        NOT peeled: a peeled iteration compiles in a different XLA context
+        than the while body and breaks bitwise parity); the numpy backend
+        runs a Python loop inside the one dispatch, keeping the contract
+        backend-uniform.  ``loop_dispatches`` counts calls.
+        """
+        if n_iters < 1:
+            raise ValueError("launch_loop needs n_iters >= 1")
+        self.loop_dispatches += 1
+        return self._launch_loop(body_fn, n_iters, carry, stream=stream)
+
+    def _launch_loop(self, body_fn, n_iters: int, carry: Dict[str, Any],
+                     *, stream: int = 0) -> Dict[str, Any]:
+        raise NotImplementedError
+
 
 class NumpyHostBackend(Backend):
     """Both memory spaces are numpy; the device is simulated with copies so
@@ -188,6 +216,12 @@ class NumpyHostBackend(Backend):
 
     def compile_fused(self, fused_fn, donate_argnums=()):
         return fused_fn            # no tracing: eager numpy
+
+    def _launch_loop(self, body_fn, n_iters, carry, *, stream: int = 0):
+        for _ in range(n_iters):
+            carry = body_fn(carry)
+        self._record(stream, Event(payload=None, _done=True))
+        return carry
 
 
 @functools.lru_cache(maxsize=512)
@@ -257,6 +291,51 @@ class JaxDeviceBackend(Backend):
         if donate_argnums and self.donate:
             return self._jax.jit(fused_fn, donate_argnums=donate_argnums)
         return self._jax.jit(fused_fn)
+
+    def _launch_loop(self, body_fn, n_iters, carry, *, stream: int = 0):
+        # the jitted whole-loop is cached ON body_fn so it lives exactly
+        # as long as the compiled plan that owns the closure (a cache on
+        # the backend would pin every program forever: the jit references
+        # body_fn, so a backend-held mapping entry could never be freed)
+        per_fn = getattr(body_fn, "_launch_loop_cache", None)
+        if per_fn is None:
+            per_fn = body_fn._launch_loop_cache = {}
+        jitted = per_fn.get(n_iters)
+        if jitted is None:
+            jax = self._jax
+
+            def one_iter(env):
+                # optimization_barrier fences each iteration: without it
+                # XLA hoists loop-invariant work (CSE/LICM) and re-fuses
+                # across iterations, which changes FMA rounding and breaks
+                # the bitwise-equality contract with the per-iteration
+                # interpreted/segment paths.  Each iteration compiles as
+                # the same isolated program a single segment launch would.
+                env = jax.lax.optimization_barrier(dict(env))
+                return jax.lax.optimization_barrier(dict(body_fn(env)))
+
+            def whole(env):
+                # body-defined carry slots (written before any read on
+                # every valid plan) are discovered abstractly and
+                # zero-initialized, so EVERY iteration runs inside the
+                # fori_loop — peeling iteration 0 to top level instead
+                # would compile it in a different XLA context than the
+                # while body and break bitwise equality (seen on CPU)
+                shapes = jax.eval_shape(body_fn, env)
+                env = dict(env)
+                import jax.numpy as jnp
+                for k, sd in shapes.items():
+                    if k not in env:
+                        env[k] = jnp.zeros(sd.shape, sd.dtype)
+                return jax.lax.fori_loop(
+                    0, n_iters, lambda i, e: one_iter(e), env)
+
+            jitted = jax.jit(whole)
+            per_fn[n_iters] = jitted
+        out = jitted(carry)
+        for v in out.values():
+            self._record(stream, Event(payload=v))
+        return out
 
 
 class PinnedHostBackend(JaxDeviceBackend):

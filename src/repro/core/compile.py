@@ -14,13 +14,24 @@ This module lowers a ``Plan`` once into a **compiled schedule**:
   async on the directive's stream); the values a ``DelegateStore``
   captures mid-segment are threaded out as extra fused outputs so the
   download sees exactly the value at the store's program point.
-* Host blocks, loops and ``Release`` fall back to the interpreter's
-  primitives.
+* A loop whose body lowers to a SINGLE pure-device segment (offload
+  blocks and syncs only — no host blocks, no ``AdvancedLoad``/
+  ``DelegateStore``/``Release`` inside the body) and that the planner
+  has marked loop-invariant (``plan.meta["pure_device_loops"]``) is
+  rolled whole into ONE backend dispatch (``Backend.launch_loop``:
+  ``jax.jit`` + ``lax.fori_loop`` on device backends, a Python loop
+  inside one dispatch on numpy), carrying the segment's device values
+  as loop state.  Iterations then run back-to-back on the device with
+  no per-iteration Python re-entry at all.
+* Host blocks, remaining loops and ``Release`` fall back to the
+  interpreter's primitives.
 
 Contract (tested): for any plan, ``execute(p, mode="compiled")`` returns
 bitwise-identical outputs to ``execute(p, mode="interpreted")`` on the
 same backend, with identical *logical* ``ExecStats`` transfer counts —
-only wall-time fields (and ``fused_launches``) differ.
+``kernel_calls``/``syncs`` still count per iteration inside a fused
+loop while ``fused_launches`` counts 1; only wall-time fields (and
+``fused_launches``) differ.
 
 A segment is split before an ``AdvancedLoad`` whose variable an earlier
 op in the same segment dirtied — stored (the upload must observe the
@@ -126,6 +137,20 @@ def _build_segment(run: List[PlanOp], program: Program) -> _Segment:
                     n_stores=n_stores, final_writes=tuple(writes_order))
 
 
+def _replay_block(blk, xp, env: Dict[str, Any], get_dummy) -> None:
+    """The single shared per-block replay both compiled paths trace:
+    actual reads come from ``env``, pruned (dead) declared reads from
+    ``get_dummy(var)``, and every write lands back in ``env``.  Keeping
+    this in one place is what keeps segment mode and fused-loop mode
+    bitwise-interchangeable."""
+    actual = set(blk.effective_reads())
+    kwargs = {v: (env[v] if v in actual else get_dummy(v))
+              for v in blk.reads}
+    out = blk.fn(xp, **kwargs)
+    for w in blk.writes:
+        env[w] = out[w]
+
+
 def _make_fused(seg: _Segment, program: Program, xp):
     """The traced body: replays the segment symbolically; returns the
     store-captured values followed by the final device value of every
@@ -144,19 +169,68 @@ def _make_fused(seg: _Segment, program: Program, xp):
             if it[0] == "load":
                 env[it[1].var] = args[load_pos[it[2]]]
             elif it[0] == "block":
-                blk = program.blocks[it[1]]
-                actual = set(blk.effective_reads())
-                kwargs = {v: (env[v] if v in actual
-                              else args[dummy_pos[v]])
-                          for v in blk.reads}
-                out = blk.fn(xp, **kwargs)
-                for w in blk.writes:
-                    env[w] = out[w]
+                _replay_block(program.blocks[it[1]], xp, env,
+                              lambda v: args[dummy_pos[v]])
             elif it[0] == "store":
                 stores[it[2]] = env[it[1].var]
         return tuple(stores) + tuple(env[v] for v in seg.final_writes)
 
     return fused
+
+
+_DUMMY = "__dummy__"    # carry-key prefix for pruned (dead) declared reads
+
+
+@dataclasses.dataclass
+class _FusedLoop:
+    """A whole loop rolled into one backend dispatch.
+
+    ``seg`` is the body's (single, pure-device) segment; the carry is a
+    dict over the segment's entry variables (+ ``_DUMMY``-prefixed
+    placeholders for pruned reads), and after the launch the final device
+    value of every body-written variable is read back out of the carry.
+    """
+    loop_id: int
+    n_iters: int
+    seg: _Segment
+    body_fn: Any            # carry dict -> carry dict, over backend.xp
+
+
+def _make_loop_body(seg: _Segment, program: Program, xp):
+    """The per-iteration body replayed over a carry dict: blocks run in
+    program order reading/writing the carry (via the same ``_replay_block``
+    the segment path traces); sync items are wait points handled by the
+    driver, a no-op inside the trace."""
+    def body(env):
+        env = dict(env)
+        for it in seg.items:
+            if it[0] == "block":
+                _replay_block(program.blocks[it[1]], xp, env,
+                              lambda v: env[_DUMMY + v])
+        return env
+    return body
+
+
+def _try_fuse_loop(loop_id: int, inner: List[Tuple], p: Plan,
+                   be: Backend) -> Optional[Tuple]:
+    """Return a ``("fused_loop", _FusedLoop)`` node when the loop body is
+    provably pure-device: the planner marked the loop invariant AND the
+    body lowered to exactly one segment with blocks but no transfers.
+    (The structural check keeps hand-mutated plans safe: a load spliced
+    into the body disqualifies it regardless of the stale meta.)"""
+    if loop_id not in p.meta.get("pure_device_loops", ()):
+        return None
+    if len(inner) != 1 or inner[0][0] != "seg":
+        return None
+    seg: _Segment = inner[0][1]
+    n_iters = p.program.loops[loop_id].n_iters
+    if not seg.blocks or n_iters < 1:
+        return None
+    if any(it[0] in ("load", "store") for it in seg.items):
+        return None
+    return ("fused_loop", _FusedLoop(
+        loop_id=loop_id, n_iters=n_iters, seg=seg,
+        body_fn=_make_loop_body(seg, p.program, be.xp)))
 
 
 def _donatable(seg: _Segment) -> Tuple[int, ...]:
@@ -174,7 +248,8 @@ def _donatable(seg: _Segment) -> Tuple[int, ...]:
 # Lowering: plan tree -> schedule of host blocks / segments / loops.
 # --------------------------------------------------------------------------
 
-def _lower(tree, program: Program, be: Backend) -> List[Tuple]:
+def _lower(tree, p: Plan, be: Backend, fuse_loops: bool) -> List[Tuple]:
+    program = p.program
     schedule: List[Tuple] = []
     run: List[PlanOp] = []
     # vars whose host copy an in-segment op has changed (DelegateStore) or
@@ -198,7 +273,10 @@ def _lower(tree, program: Program, be: Backend) -> List[Tuple]:
         if item[0] == "loop":
             flush()
             _, loop_id, body = item
-            schedule.append(("loop", loop_id, _lower(body, program, be)))
+            inner = _lower(body, p, be, fuse_loops)
+            node = _try_fuse_loop(loop_id, inner, p, be) \
+                if fuse_loops else None
+            schedule.append(node or ("loop", loop_id, inner))
             continue
         op: PlanOp = item[1]
         if op.kind == "block":
@@ -213,7 +291,7 @@ def _lower(tree, program: Program, be: Backend) -> List[Tuple]:
         d = op.directive
         if isinstance(d, Release):
             flush()
-            schedule.append(("release",))
+            schedule.append(("release", d))
         elif isinstance(d, (GroupDecl, Callsite)):
             continue
         elif isinstance(d, AdvancedLoad) and d.var in dirty_vars:
@@ -249,12 +327,58 @@ class CompiledPlan:
             if kind == "loop":
                 for _ in range(program.loops[item[1]].n_iters):
                     self._run_schedule(item[2], env, stats, check)
+            elif kind == "fused_loop":
+                self._run_fused_loop(item[1], env, stats, check)
             elif kind == "host":
                 _run_block(program, item[1], env, stats, check, be)
             elif kind == "release":
-                do_release(env, be)
+                do_release(item[1], env, be, self.plan)
             else:
                 self._run_segment(item[1], env, stats, check)
+
+    def _run_fused_loop(self, node: _FusedLoop, env, stats: ExecStats,
+                        check: bool) -> None:
+        """One backend dispatch for the whole loop; logical stats still
+        count every iteration (``kernel_calls``/``syncs`` scale with the
+        trip count, ``fused_launches`` counts 1)."""
+        be = self.backend
+        seg = node.seg
+        carry: Dict[str, Any] = {}
+        for tag, v in seg.arg_spec:
+            slot = env.setdefault(v, _Slot())
+            if tag == "dummy":
+                carry[_DUMMY + v] = dummy_arg(slot, be)
+                continue
+            if not slot.valid_device:
+                if check:
+                    raise PlanExecutionError(
+                        f"fused loop reads {v!r}: not on device "
+                        f"(missing advancedload)")
+                slot.device = be.upload(slot.host)
+                slot.valid_device = True
+            carry[v] = slot.device
+
+        t = time.perf_counter()
+        out = be.launch_loop(node.body_fn, node.n_iters, carry)
+        stats.kernel_time += time.perf_counter() - t
+        stats.kernel_calls += len(seg.blocks) * node.n_iters
+        stats.fused_launches += 1
+
+        for w in seg.final_writes:
+            slot = env.setdefault(w, _Slot())
+            slot.device = out[w]
+            slot.valid_device, slot.valid_host = True, False
+
+        # syncs inside the body: one real wait after the launch, counted
+        # once per iteration for parity with the interpreter
+        for it in seg.items:
+            if it[0] == "sync":
+                d = it[1]
+                t = time.perf_counter()
+                be.sync(d.stream)
+                be.sync(0)
+                stats.sync_time += time.perf_counter() - t
+                stats.syncs += node.n_iters
 
     def _run_segment(self, seg: _Segment, env, stats: ExecStats,
                      check: bool) -> None:
@@ -318,9 +442,13 @@ class CompiledPlan:
                     slot.valid_device, slot.valid_host = True, False
 
 
-def compile_plan(p: Plan, backend: Backend) -> CompiledPlan:
+def compile_plan(p: Plan, backend: Backend, *,
+                 fuse_loops: bool = True) -> CompiledPlan:
     """Lower ``p`` for ``backend``; segments are traced/compiled lazily on
-    first call by the backend's compiler (``jax.jit`` caches thereafter)."""
+    first call by the backend's compiler (``jax.jit`` caches thereafter).
+    ``fuse_loops=False`` keeps eligible loops as per-iteration segment
+    dispatches (the PR-1 behaviour) — useful for benchmarking the
+    whole-loop lowering win in isolation."""
     tree = _nest(p.ops, p.program)
-    schedule = _lower(tree, p.program, backend)
+    schedule = _lower(tree, p, backend, fuse_loops)
     return CompiledPlan(plan=p, backend=backend, schedule=schedule)

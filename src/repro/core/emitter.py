@@ -55,9 +55,16 @@ def emit(plan: Plan) -> str:
     w("{")
     indent += 1
 
+    fused_loops = set(plan.pure_device_loops())
     for op in plan.ops:
         if op.kind == "loop_begin":
             info = prog.loops[op.loop_id]
+            if op.loop_id in fused_loops:
+                # planner intent: the compiled path re-verifies the body
+                # structurally before actually fusing (see core.compile)
+                w(f"#pragma hmpp region, target=TPU  /* whole-loop "
+                  f"lowering: planner proved the {info.n_iters}-iteration "
+                  f"body device-pure; eligible for ONE fused launch */")
             w(f"for (int it{op.loop_id} = 0; it{op.loop_id} < "
               f"{info.n_iters}; ++it{op.loop_id}) {{")
             indent += 1

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -38,7 +38,8 @@ from .backend import Backend, get_backend
 from .ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, GroupDecl,
                  Plan, PlanOp, Program, Release, Synchronize)
 
-__all__ = ["execute", "run_host_oracle", "ExecStats", "PlanExecutionError"]
+__all__ = ["execute", "run_host_oracle", "ExecStats", "PlanExecutionError",
+           "group_vars"]
 
 
 class PlanExecutionError(RuntimeError):
@@ -61,6 +62,8 @@ class ExecStats:
     host_time: float = 0.0
     sync_time: float = 0.0
     wall_time: float = 0.0
+    compile_time: float = 0.0   # one-time plan lowering (compiled mode);
+                                # NOT folded into wall_time
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -90,13 +93,20 @@ def _nbytes(x) -> int:
 
 def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
             *, check: bool = True, mode: str = "interpreted",
-            backend: Any = None
+            backend: Any = None, fuse_loops: bool = True
             ) -> Tuple[Dict[str, np.ndarray], ExecStats]:
     """Run the plan; return (program outputs on host, stats).
 
     ``mode`` is "interpreted" or "compiled"; ``backend`` is a
     ``Backend`` instance, a registered name ("jax", "pinned", "numpy"),
-    or None for the default JAX device backend.
+    or None for the default JAX device backend.  ``fuse_loops`` (compiled
+    mode only) rolls eligible pure-device loops into a single backend
+    dispatch (``lax.fori_loop``); disable it to benchmark the
+    per-iteration segment path.
+
+    One-time plan-lowering cost is reported as ``stats.compile_time`` and
+    excluded from ``stats.wall_time``, so first-call and steady-state runs
+    report comparable wall times.
     """
     if mode not in ("interpreted", "compiled"):
         raise ValueError(f"unknown execution mode {mode!r}")
@@ -113,20 +123,26 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
                 f"program input {k!r} is abstract; pass a concrete array")
         env[k] = _Slot(host=np.asarray(v), valid_host=True)
 
-    t0 = time.perf_counter()
     if mode == "compiled":
         from .compile import compile_plan
         cache = p.meta.setdefault("_compiled", {})
+        key = be.name if fuse_loops else be.name + ":nofuse"
         fingerprint = hash(tuple(p.ops))   # ops may be mutated by callers
-        compiled, fp = cache.get(be.name, (None, None))
+        compiled, fp = cache.get(key, (None, None))
         if compiled is None or compiled.backend is not be \
                 or fp != fingerprint:
-            compiled = compile_plan(p, be)
-            cache[be.name] = (compiled, fingerprint)
+            tc = time.perf_counter()
+            compiled = compile_plan(p, be, fuse_loops=fuse_loops)
+            stats.compile_time = time.perf_counter() - tc
+            cache[key] = (compiled, fingerprint)
+        t0 = time.perf_counter()
         compiled.run(env, stats, check)
     else:
+        # _nest runs per call (unlike the cached compiled lowering), so
+        # it stays inside wall_time: it IS part of interpreted dispatch
+        t0 = time.perf_counter()
         tree = _nest(p.ops, program)
-        _run(tree, program, env, stats, check, be)
+        _run(tree, p, env, stats, check, be)
     stats.wall_time = time.perf_counter() - t0
 
     outs = {}
@@ -166,17 +182,18 @@ def _nest(ops: List[PlanOp], program: Program):
     return tree
 
 
-def _run(tree, program: Program, env: Dict[str, _Slot], stats: ExecStats,
+def _run(tree, p: Plan, env: Dict[str, _Slot], stats: ExecStats,
          check: bool, be: Backend) -> None:
+    program = p.program
     for item in tree:
         if item[0] == "loop":
             _, loop_id, body = item
             for _ in range(program.loops[loop_id].n_iters):
-                _run(body, program, env, stats, check, be)
+                _run(body, p, env, stats, check, be)
             continue
         op: PlanOp = item[1]
         if op.kind == "directive":
-            run_directive(op.directive, env, stats, check, be)
+            run_directive(op.directive, env, stats, check, be, p)
         elif op.kind == "block":
             _run_block(program, op.block_idx, env, stats, check, be)
 
@@ -223,8 +240,32 @@ def do_sync(d: Synchronize, stats: ExecStats, be: Backend) -> None:
     stats.syncs += 1
 
 
-def do_release(env, be: Backend) -> None:
-    for slot in env.values():
+def group_vars(p: Plan, group: int) -> Set[str]:
+    """Variables owned by ``group``: its ``mapbyname`` declaration plus
+    everything its member codelets read or write (HMPP: the buffers a
+    ``release`` of that group frees)."""
+    names: Set[str] = set()
+    for d in p.directives(GroupDecl):
+        if d.group == group:
+            names.update(d.mapbyname)
+    for bi in p.groups.get(group, ()):
+        blk = p.program.blocks[bi]
+        names.update(blk.reads)
+        names.update(blk.writes)
+    return names
+
+
+def do_release(d: Optional[Release], env, be: Backend,
+               p: Optional[Plan] = None) -> None:
+    """Free device buffers for ``d``'s group only (HMPP ``release`` is
+    per-group).  Without a directive/plan (hand-driven callers) every
+    group's buffers are freed — the pre-group legacy behaviour."""
+    if d is not None and p is not None:
+        names = group_vars(p, d.group)
+        slots = [env[v] for v in names if v in env]
+    else:
+        slots = list(env.values())
+    for slot in slots:
         if slot.valid_host:
             if slot.device is not None:
                 be.free(slot.device)
@@ -233,7 +274,7 @@ def do_release(env, be: Backend) -> None:
 
 
 def run_directive(d, env, stats: ExecStats, check: bool,
-                  be: Backend) -> None:
+                  be: Backend, p: Optional[Plan] = None) -> None:
     if isinstance(d, AdvancedLoad):
         do_load(d, env, stats, be)
     elif isinstance(d, DelegateStore):
@@ -241,7 +282,7 @@ def run_directive(d, env, stats: ExecStats, check: bool,
     elif isinstance(d, Synchronize):
         do_sync(d, stats, be)
     elif isinstance(d, Release):
-        do_release(env, be)
+        do_release(d, env, be, p)
     elif isinstance(d, (GroupDecl, Callsite)):
         pass  # metadata; the following block op performs the call
 
@@ -343,4 +384,6 @@ def run_host_oracle(program: Program,
                 i = j
 
     run_span(program.blocks, ())
-    return {name: env[name] for name in (program.outputs or env.keys())}
+    # same output contract as ``execute``: exactly ``program.outputs``
+    # (in particular {} when no outputs are declared), never the raw env
+    return {name: env[name] for name in program.outputs}

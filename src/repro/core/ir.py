@@ -240,6 +240,13 @@ class Plan:
     ops: List[PlanOp]
     groups: Dict[int, Tuple[int, ...]]       # group id -> offload block idxs
     io_table: Dict[int, Dict[str, VarIO]]    # block idx -> var -> io
+    # meta keys set by the planner:
+    #   "optimize"          — True for the optimized policy
+    #   "pure_device_loops" — loop ids whose body holds only offload
+    #       blocks and metadata/sync directives (no host blocks, no
+    #       AdvancedLoad/DelegateStore/Release).  Together with
+    #       ``program.loops[lid].n_iters`` this is what the compiled path
+    #       needs to roll the whole loop into one fused launch.
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def directives(self, cls=None) -> List[Directive]:
@@ -250,3 +257,7 @@ class Plan:
 
     def count(self, cls) -> int:
         return len(self.directives(cls))
+
+    def pure_device_loops(self) -> Tuple[int, ...]:
+        """Loop ids the planner proved transfer-free (fusable whole)."""
+        return tuple(self.meta.get("pure_device_loops", ()))

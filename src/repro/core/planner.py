@@ -244,9 +244,13 @@ def _place_naive(an: ProgramAnalysis, ops: List[PlanOp]) -> List[_Insertion]:
         for var, io in sorted(an.io_table[blk.idx].items()):
             if io is not VarIO.OUT:
                 add(pos, AdvancedLoad(var=var, group=g, asynchronous=False))
-        for var, io in sorted(an.io_table[blk.idx].items()):
-            if io is not VarIO.IN:
-                add(pos + 1, Synchronize(block_idx=blk.idx, group=g))
+        outs = [var for var, io in sorted(an.io_table[blk.idx].items())
+                if io is not VarIO.IN]
+        if outs:
+            # one wait point per callsite (Fig. 5a), then every download —
+            # not a sync per output
+            add(pos + 1, Synchronize(block_idx=blk.idx, group=g))
+            for var in outs:
                 add(pos + 1, DelegateStore(var=var, group=g))
     return ins
 
@@ -453,6 +457,39 @@ def _assign_streams(ops: List[PlanOp]) -> List[PlanOp]:
 
 
 # --------------------------------------------------------------------------
+# Loop-invariance marking — proof the compiler relies on for whole-loop
+# lowering (lax.fori_loop over the body).
+# --------------------------------------------------------------------------
+
+def _pure_device_loops(program: Program,
+                       ops: List[PlanOp]) -> Tuple[int, ...]:
+    """Loop ids whose body is pure device work in THIS plan: only offload
+    blocks and metadata/sync directives inside — no host blocks and no
+    ``AdvancedLoad``/``DelegateStore``/``Release``.  The compiled path may
+    roll such a loop whole into one fused launch, because no per-iteration
+    op needs the host."""
+    pure: Dict[int, bool] = {}
+    stack: List[int] = []
+    for op in ops:
+        if op.kind == "loop_begin":
+            stack.append(op.loop_id)
+            pure.setdefault(op.loop_id, True)
+        elif op.kind == "loop_end":
+            stack.pop()
+        elif stack:
+            ok = True
+            if op.kind == "block":
+                ok = program.blocks[op.block_idx].kind is BlockKind.OFFLOAD
+            elif op.kind == "directive":
+                ok = not isinstance(
+                    op.directive, (AdvancedLoad, DelegateStore, Release))
+            if not ok:
+                for lid in stack:
+                    pure[lid] = False
+    return tuple(sorted(lid for lid, v in pure.items() if v))
+
+
+# --------------------------------------------------------------------------
 # Entry points.
 # --------------------------------------------------------------------------
 
@@ -483,9 +520,12 @@ def plan(program: Program, *, optimize: bool = True,
     tail = [PlanOp("directive", directive=Release(group=g))
             for g in sorted(an.groups)]
 
-    return Plan(program=program, ops=head + ops + tail,
+    all_ops = head + ops + tail
+    return Plan(program=program, ops=all_ops,
                 groups=an.groups, io_table=an.io_table,
-                meta={"optimize": optimize})
+                meta={"optimize": optimize,
+                      "pure_device_loops":
+                          _pure_device_loops(program, all_ops)})
 
 
 def naive_plan(program: Program,

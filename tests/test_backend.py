@@ -68,16 +68,30 @@ class TestCompiledEquivalence:
         assert s_c.kernel_calls == 3
         assert s_c.fused_launches == 1
 
-    def test_loop_body_compiled_once_per_entry(self):
-        """A loop body's segment is one fused callable reused across
-        iterations: kernel_calls scales with trip count, fused launches
-        equal trip count (one segment per iteration), and the underlying
-        jit cache is shared (same outputs bitwise)."""
+    def test_loop_body_lowered_whole(self):
+        """A pure-device loop body rolls into ONE fused launch for the
+        whole loop (lax.fori_loop): kernel_calls still scales with trip
+        count (logical parity with the interpreter) while fused_launches
+        counts a single dispatch."""
         from repro.polybench import build
         p, _ = build("gemm", n=32, iters=5)
         _, s_i, s_c = _modes_equal(p)
         assert s_c.kernel_calls == 5
-        assert s_c.fused_launches == 5
+        assert s_c.fused_launches == 1
+
+    def test_loop_fusion_can_be_disabled(self):
+        """fuse_loops=False keeps the PR-1 per-iteration segment path:
+        one fused launch per iteration, same outputs."""
+        from repro.polybench import build
+        p, _ = build("gemm", n=32, iters=5)
+        pl = plan(p)
+        out_f, s_f = execute(pl, mode="compiled")
+        out_n, s_n = execute(pl, mode="compiled", fuse_loops=False)
+        for k in p.outputs:
+            np.testing.assert_array_equal(out_f[k], out_n[k])
+        assert s_f.fused_launches == 1
+        assert s_n.fused_launches == 5
+        assert s_f.transfer_counts() == s_n.transfer_counts()
 
     def test_compiled_mode_checks_residency(self):
         """A hand-broken plan (load removed) still raises."""

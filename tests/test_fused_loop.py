@@ -1,0 +1,227 @@
+"""Whole-loop lowering (ISSUE 2 tentpole) + executor/planner bugfixes.
+
+The fused-loop contract:
+
+  * a loop whose body is pure device work (offload blocks only — no host
+    blocks, no AdvancedLoad/DelegateStore/Release inside) executes as
+    EXACTLY ONE backend dispatch in compiled mode (``lax.fori_loop`` on
+    device backends, a Python loop inside one dispatch on numpy),
+  * outputs stay bitwise-equal to interpreted mode on every backend,
+  * logical ``ExecStats`` (kernel_calls, transfers, syncs) stay identical
+    to interpreted mode — they count per iteration; ``fused_launches``
+    counts 1.
+
+Plus regression tests for the satellite bugfixes: group-scoped Release,
+``compile_time`` accounting, one naive Synchronize per callsite, and the
+host-oracle output contract.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AdvancedLoad, DelegateStore, PlanExecutionError,
+                        Program, Release, Synchronize, compile_plan, execute,
+                        get_backend, naive_plan, plan, run_host_oracle,
+                        transfer_summary)
+from repro.core.ir import PlanOp
+from repro.optim import plan_step_program
+from repro.polybench import build
+
+
+def _loop_prog(iters=6):
+    """Kernel loop whose body is pure device: inputs hoisted before, the
+    only download sunk after — the paper's residency case."""
+    p = Program("fused")
+    rng = np.random.default_rng(7)
+    p.bind("A", rng.standard_normal((24, 24)).astype(np.float32))
+    p.bind("C", rng.standard_normal((24, 24)).astype(np.float32))
+    with p.loop(iters):
+        p.offload(lambda xp, A, C: {"C": 0.25 * (A @ C) + C},
+                  reads=("A", "C"), writes=("C",), name="k")
+    p.host(lambda xp, C: {"out": C.sum(axis=0, keepdims=True)},
+           reads=("C",), writes=("out",), name="consume")
+    p.set_outputs("out")
+    return p
+
+
+class TestFusedLoop:
+    @pytest.mark.parametrize("backend", ["numpy", "jax", "pinned"])
+    def test_bitwise_equal_and_logical_parity(self, backend):
+        be = get_backend(backend)
+        p = _loop_prog(iters=6)
+        pl = plan(p)
+        out_i, s_i = execute(pl, mode="interpreted", backend=be)
+        out_c, s_c = execute(pl, mode="compiled", backend=be)
+        np.testing.assert_array_equal(out_i["out"], out_c["out"])
+        assert s_i.transfer_counts() == s_c.transfer_counts()
+        assert s_c.kernel_calls == 6          # logical: one per iteration
+        assert s_c.fused_launches == 1        # physical: one for the loop
+
+    @pytest.mark.parametrize("backend", ["numpy", "jax", "pinned"])
+    def test_single_backend_dispatch(self, backend):
+        """The backend's own dispatch counter: an eligible N-iteration
+        loop is exactly 1 launch_loop call."""
+        be = get_backend(backend)
+        p = _loop_prog(iters=5)
+        before = be.loop_dispatches
+        _, s_c = execute(plan(p), mode="compiled", backend=be)
+        assert be.loop_dispatches - before == 1
+        assert s_c.fused_launches == 1
+
+    def test_planner_marks_pure_device_loops(self):
+        pl = plan(_loop_prog())
+        assert len(pl.pure_device_loops()) == 1
+        # a load inside the loop body (naive policy) disqualifies it
+        nv = naive_plan(_loop_prog())
+        assert nv.pure_device_loops() == ()
+
+    def test_host_block_in_loop_not_fused(self):
+        p = Program()
+        p.bind("A", np.ones((8,), np.float32))
+        with p.loop(4):
+            p.host(lambda xp, A: {"A": A + 1.0}, reads=("A",),
+                   writes=("A",), name="w")
+            p.offload(lambda xp, A: {"B": A * 2.0}, reads=("A",),
+                      writes=("B",), name="k")
+        p.host(lambda xp, B: {"o": B}, reads=("B",), writes=("o",),
+               name="c")
+        p.set_outputs("o")
+        pl = plan(p)
+        assert pl.pure_device_loops() == ()
+        _, s_c = execute(pl, mode="compiled")
+        assert s_c.fused_launches == 4        # one segment per iteration
+
+    def test_multi_block_body_with_body_defined_state(self):
+        """plan_step_program's loop body defines grad/loss inside the
+        body (not device-resident at entry): the fused loop threads them
+        through the carry and the post-loop download still sees the last
+        iteration's value."""
+        p = plan_step_program(n_steps=5)
+        pl = plan(p)
+        assert len(pl.pure_device_loops()) == 1
+        out_i, s_i = execute(pl, mode="interpreted")
+        out_c, s_c = execute(pl, mode="compiled")
+        for k in p.outputs:
+            np.testing.assert_array_equal(out_i[k], out_c[k])
+        assert s_i.transfer_counts() == s_c.transfer_counts()
+        assert s_c.kernel_calls == 10         # 2 blocks x 5 iterations
+        assert s_c.fused_launches == 1
+
+    def test_mutated_plan_body_load_disables_fusion(self):
+        """Splicing an AdvancedLoad into a marked-pure loop body must not
+        fuse (the structural check gates stale meta) and must keep count
+        parity with the interpreter."""
+        p = _loop_prog(iters=3)
+        pl = plan(p)
+        begin = next(i for i, op in enumerate(pl.ops)
+                     if op.kind == "loop_begin")
+        pl.ops.insert(begin + 1, PlanOp("directive", directive=AdvancedLoad(
+            var="A", group=0, stream=1)))
+        out_i, s_i = execute(pl, mode="interpreted")
+        out_c, s_c = execute(pl, mode="compiled")
+        np.testing.assert_array_equal(out_i["out"], out_c["out"])
+        assert s_i.transfer_counts() == s_c.transfer_counts()
+        assert s_c.h2d_transfers == s_i.h2d_transfers >= 3
+
+    def test_emitter_prints_fused_region(self):
+        from repro.core import emit
+        text = emit(plan(_loop_prog()))
+        assert "whole-loop lowering" in text
+        assert "region" in text
+
+    def test_compile_time_excluded_from_wall_time(self):
+        p = _loop_prog(iters=3)
+        pl = plan(p)
+        _, s_first = execute(pl, mode="compiled")
+        _, s_again = execute(pl, mode="compiled")
+        assert s_first.compile_time > 0.0     # lowering happened once...
+        assert s_again.compile_time == 0.0    # ...and was cached
+        assert s_first.transfer_counts() == s_again.transfer_counts()
+
+
+class TestReleaseGroups:
+    def _two_group_prog(self):
+        p = Program("two_groups")
+        p.bind("a", np.arange(8, dtype=np.float32))
+        p.bind("b", np.arange(8, dtype=np.float32) + 100.0)
+        p.offload(lambda xp, a: {"x": a * 2.0}, reads=("a",),
+                  writes=("x",), name="k0")
+        p.offload(lambda xp, b: {"y": b + 1.0}, reads=("b",),
+                  writes=("y",), name="k1")
+        p.host(lambda xp, x, y: {"o": x + y}, reads=("x", "y"),
+               writes=("o",), name="c")
+        p.set_outputs("o")
+        return p
+
+    def test_release_frees_only_its_group(self):
+        """A Release(group=0) moved before group 1's callsite must leave
+        group 1's device-resident input alone.  (The old do_release freed
+        EVERY group's buffers at the first Release, which made this plan
+        raise 'not on device' at k1.)"""
+        p = self._two_group_prog()
+        pl = plan(p)
+        assert len(pl.groups) == 2
+        rel0 = next(op for op in pl.ops if op.kind == "directive"
+                    and isinstance(op.directive, Release)
+                    and op.directive.group == 0)
+        k1_pos = next(i for i, op in enumerate(pl.ops)
+                      if op.kind == "block"
+                      and p.blocks[op.block_idx].name == "k1")
+        pl.ops.remove(rel0)
+        # at k1's callsite b (group 1) is already device-resident: the
+        # old release-everything behaviour freed it here and k1 raised
+        # "reads 'b': not on device"
+        pl.ops.insert(k1_pos, rel0)
+        oracle = run_host_oracle(p)
+        for mode in ("interpreted", "compiled"):
+            out, _ = execute(pl, mode=mode)
+            np.testing.assert_allclose(out["o"], oracle["o"], rtol=1e-6)
+
+    def test_group_vars_resolution(self):
+        from repro.core.executor import group_vars
+        p = self._two_group_prog()
+        pl = plan(p)
+        assert group_vars(pl, 0) == {"a", "x"}
+        assert group_vars(pl, 1) == {"b", "y"}
+
+
+class TestNaiveSyncPerCallsite:
+    def test_single_sync_for_multi_output_block(self):
+        p = Program()
+        p.bind("A", np.ones((8, 8), np.float32))
+        p.offload(lambda xp, A: {"S": A.sum(axis=0), "P": A * 2.0},
+                  reads=("A",), writes=("S", "P"), name="k")
+        p.host(lambda xp, S, P: {"o": S + P.sum(axis=0)},
+               reads=("S", "P"), writes=("o",), name="c")
+        p.set_outputs("o")
+        pl = naive_plan(p)
+        s = transfer_summary(pl)
+        assert s["stores"] == 2
+        assert s["syncs"] == 1            # per callsite, not per output
+        _, stats = execute(pl)
+        assert stats.syncs == 1
+        assert stats.d2h_transfers == 2
+
+    def test_naive_syncs_equal_storing_callsites(self):
+        p, _ = build("3mm", n=16)
+        pl = naive_plan(p)
+        stores = pl.directives(DelegateStore)
+        syncs = pl.directives(Synchronize)
+        assert len(syncs) == len({d.block_idx for d in syncs})
+        assert len(syncs) == 3 and len(stores) == 3
+
+
+class TestOracleOutputContract:
+    def test_empty_outputs_returns_empty_like_execute(self):
+        p = Program()
+        p.bind("a", np.ones((4,), np.float32))
+        p.offload(lambda xp, a: {"b": a * 2.0}, reads=("a",),
+                  writes=("b",), name="k")
+        # no set_outputs: nothing is requested back on the host
+        assert run_host_oracle(p) == {}
+        out, _ = execute(plan(p))
+        assert out == {}
+
+    def test_oracle_keys_match_declared_outputs(self):
+        p = _loop_prog(iters=2)
+        oracle = run_host_oracle(p)
+        assert set(oracle) == set(p.outputs)

@@ -86,6 +86,8 @@ def test_optimized_equals_naive_equals_oracle(p):
     oracle = run_host_oracle(p)
     out_opt, s_opt = execute(plan(p))          # check=True validates plan
     out_nv, s_nv = execute(naive_plan(p))
+    # output contract: every runner returns exactly program.outputs
+    assert set(oracle) == set(out_opt) == set(out_nv) == set(p.outputs)
     for k in p.outputs:
         np.testing.assert_allclose(out_opt[k], oracle[k], rtol=1e-5,
                                    atol=1e-5)

@@ -24,10 +24,15 @@ before timing, and one-time lowering cost is reported separately as
 ``compile_ms`` (``ExecStats.compile_time``), never folded into the
 timed columns.
 
-``--quick`` shrinks sizes for CI smoke runs.
+``--tune`` additionally runs the plan-space explorer
+(``plan(p, policy="auto")``) on each benchmark program plus the 3mm
+worked example, prints the winner per program, and writes the full
+ranked predicted-vs-measured tables to ``tuning_report.json`` (the CI
+artifact).  ``--quick`` shrinks sizes for CI smoke runs.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 from typing import Dict
@@ -154,11 +159,50 @@ def bench_delegatestore() -> Dict:
     }
 
 
+def bench_tuner(out_path: str = "tuning_report.json") -> Dict:
+    """Plan-space exploration over the benchmark programs + 3mm: the
+    winner per program and the full ranked candidate tables, persisted
+    as the CI ``tuning_report.json`` artifact."""
+    from repro.polybench import build_3mm
+    p3, _ = build_3mm(n=min(N, 256))
+    programs = {
+        "fig4_advancedload": _advancedload_prog(),
+        "fig5_delegatestore": _delegatestore_prog(),
+        "table2_3mm": p3,
+    }
+    report: Dict[str, Dict] = {"params": {"N": N, "ITERS": ITERS},
+                               "programs": {}}
+    rows = {}
+    for name, prog in sorted(programs.items()):
+        pl = plan(prog, policy="auto", reps=max(1, REPS - 1))
+        tuning = pl.meta["tuning"]
+        chosen = pl.predicted_cost()
+        report["programs"][name] = tuning
+        rows[name] = {
+            "chosen": tuning["chosen"],
+            "n_candidates": sum(1 for c in tuning["candidates"]
+                                if c["valid"]),
+            "predicted_ms": chosen["predicted_s"] * 1e3,
+            "measured_ms": (chosen["measured_s"] or 0.0) * 1e3,
+        }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return {"name": "plan_tuner", "report_path": out_path, "rows": rows}
+
+
 def main(argv=None):
     global N, ITERS, REPS
     args = list(sys.argv[1:] if argv is None else argv)
     if "--quick" in args:
         N, ITERS, REPS = 256, 4, 1   # CI smoke: exercise every column fast
+    if "--tune" in args:
+        r = bench_tuner()
+        for name, row in sorted(r["rows"].items()):
+            extra = ";".join(f"{k}={v if not isinstance(v, float) else round(v, 3)}"
+                             for k, v in row.items())
+            print(f"tune_{name},{row['measured_ms'] * 1e3:.0f},{extra}")
+        print(f"tuning report written to {r['report_path']}")
+        return [r]
     results = []
     for bench in (bench_advancedload, bench_delegatestore):
         r = bench()

@@ -82,10 +82,12 @@ def run(arch: str = "internlm2-20b"):
 
 def run_plan_executor(n_steps: int = 64, reps: int = 3):
     """The miniature train loop as a block program, every cell of
-    {naive, optimized} x {interpreted, compiled, compiled+loop}.  All
-    wall times are steady-state: the jits are warmed before timing and
-    one-time plan lowering is surfaced separately (``compile_ms``,
-    from ``ExecStats.compile_time``)."""
+    {naive, optimized} x {interpreted, compiled, compiled+loop}, plus
+    the plan-space explorer's winner (``policy="auto"``) as a fourth
+    row — the tuner must never lose to the fixed schedules it
+    enumerates.  All wall times are steady-state: the jits are warmed
+    before timing and one-time plan lowering is surfaced separately
+    (``compile_ms``, from ``ExecStats.compile_time``)."""
     p = plan_step_program(n_steps=n_steps)
     plans = {"naive": naive_plan(p), "opt": plan(p)}
     modes = (("interpreted", dict(mode="interpreted")),
@@ -112,6 +114,23 @@ def run_plan_executor(n_steps: int = 64, reps: int = 3):
                               / out["t_opt_compiled_ms"])
     out["loop_win_opt"] = (out["t_opt_compiled_ms"]
                            / out["t_opt_compiled_loop_ms"])
+
+    # --- plan-space explorer: the tuned winner ---------------------------
+    from repro.core import winner_exec_kwargs
+    tuned = plan(p, policy="auto", reps=reps)
+    kw = winner_exec_kwargs(tuned)   # honors fuse_loops AND donate
+    execute(tuned, **kw)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        execute(tuned, **kw)
+        ts.append(time.perf_counter() - t0)
+    out["t_auto_ms"] = min(ts) * 1e3
+    out["auto_variant"] = tuned.meta["tuning"]["chosen"]
+    out["auto_candidates"] = sum(
+        1 for c in tuned.meta["tuning"]["candidates"] if c["valid"])
+    chosen = tuned.predicted_cost()
+    out["auto_predicted_ms"] = chosen["predicted_s"] * 1e3
     return out
 
 

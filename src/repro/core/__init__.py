@@ -24,8 +24,11 @@ from .executor import ExecStats, PlanExecutionError, execute, run_host_oracle
 from .ir import (AdvancedLoad, Block, BlockKind, Callsite, DelegateStore,
                  GroupDecl, Plan, PlanOp, Program, Release, Synchronize,
                  VarIO)
+from .passes import (Pass, Pipeline, PlanDraft, get_placement,
+                     placement_names, register_placement)
 from .planner import naive_plan, plan, transfer_summary
 from .residency import DeviceResidency, ResidencyStats
+from .tuner import PlanConfig, predict_cost, tune, winner_exec_kwargs
 
 __all__ = [
     "Program", "Block", "BlockKind", "VarIO", "Plan", "PlanOp",
@@ -37,4 +40,7 @@ __all__ = [
     "Backend", "Event", "NumpyHostBackend", "JaxDeviceBackend",
     "PinnedHostBackend", "get_backend", "register_backend",
     "emit", "DeviceResidency", "ResidencyStats",
+    "Pass", "Pipeline", "PlanDraft",
+    "register_placement", "get_placement", "placement_names",
+    "PlanConfig", "predict_cost", "tune", "winner_exec_kwargs",
 ]

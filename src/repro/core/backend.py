@@ -163,7 +163,8 @@ class Backend:
     def launch_loop(self, body_fn: Callable[[Dict[str, Any]],
                                             Dict[str, Any]],
                     n_iters: int, carry: Dict[str, Any],
-                    *, stream: int = 0) -> Dict[str, Any]:
+                    *, stream: int = 0,
+                    donate_keys: Sequence[str] = ()) -> Dict[str, Any]:
         """Whole-loop launch: run ``carry = body_fn(carry)`` ``n_iters``
         times as ONE backend dispatch and return the final carry.
 
@@ -177,15 +178,35 @@ class Backend:
         than the while body and breaks bitwise parity); the numpy backend
         runs a Python loop inside the one dispatch, keeping the contract
         backend-uniform.  ``loop_dispatches`` counts calls.
+
+        ``donate_keys`` names carry entries whose pre-launch buffers the
+        caller will not reuse (rewritten loop state — the fused-loop
+        analogue of segment arg donation); backends may donate them to
+        the launch.  Opt-in: only backends constructed with
+        ``donate=True`` act on it.
         """
         if n_iters < 1:
             raise ValueError("launch_loop needs n_iters >= 1")
         self.loop_dispatches += 1
-        return self._launch_loop(body_fn, n_iters, carry, stream=stream)
+        return self._launch_loop(body_fn, n_iters, carry, stream=stream,
+                                 donate_keys=tuple(donate_keys))
 
     def _launch_loop(self, body_fn, n_iters: int, carry: Dict[str, Any],
-                     *, stream: int = 0) -> Dict[str, Any]:
+                     *, stream: int = 0,
+                     donate_keys: Tuple[str, ...] = ()) -> Dict[str, Any]:
         raise NotImplementedError
+
+    def loop_in_body(self, body_fn: Callable[[Dict[str, Any]],
+                                             Dict[str, Any]],
+                     n_iters: int, env: Dict[str, Any]) -> Dict[str, Any]:
+        """Run ``env = body_fn(env)`` ``n_iters`` times INSIDE a trace —
+        the primitive nested fused loops are built from (the outer loop's
+        body is ``loop_in_body`` over the inner one).  Default: a plain
+        Python loop (numpy, or any eager backend).  Device backends
+        override it with an in-trace ``lax.fori_loop``."""
+        for _ in range(n_iters):
+            env = body_fn(env)
+        return env
 
 
 class NumpyHostBackend(Backend):
@@ -217,7 +238,8 @@ class NumpyHostBackend(Backend):
     def compile_fused(self, fused_fn, donate_argnums=()):
         return fused_fn            # no tracing: eager numpy
 
-    def _launch_loop(self, body_fn, n_iters, carry, *, stream: int = 0):
+    def _launch_loop(self, body_fn, n_iters, carry, *, stream: int = 0,
+                     donate_keys=()):
         for _ in range(n_iters):
             carry = body_fn(carry)
         self._record(stream, Event(payload=None, _done=True))
@@ -292,7 +314,36 @@ class JaxDeviceBackend(Backend):
             return self._jax.jit(fused_fn, donate_argnums=donate_argnums)
         return self._jax.jit(fused_fn)
 
-    def _launch_loop(self, body_fn, n_iters, carry, *, stream: int = 0):
+    def loop_in_body(self, body_fn, n_iters, env):
+        """In-trace whole loop — THE single fencing/zero-init discipline
+        both the flat `_launch_loop` and nested fusion build on.
+
+        optimization_barrier fences each iteration: without it XLA
+        hoists loop-invariant work (CSE/LICM) and re-fuses across
+        iterations, which changes FMA rounding and breaks the
+        bitwise-equality contract with the per-iteration interpreted/
+        segment paths.  Body-defined carry slots (written before any
+        read on every valid plan) are discovered abstractly and
+        zero-initialized, so EVERY iteration runs inside the fori_loop —
+        peeling iteration 0 to top level instead would compile it in a
+        different XLA context than the while body and break bitwise
+        equality (seen on CPU)."""
+        jax = self._jax
+        import jax.numpy as jnp
+
+        def one_iter(e):
+            e = jax.lax.optimization_barrier(dict(e))
+            return jax.lax.optimization_barrier(dict(body_fn(e)))
+
+        shapes = jax.eval_shape(body_fn, env)
+        env = dict(env)
+        for k, sd in shapes.items():
+            if k not in env:
+                env[k] = jnp.zeros(sd.shape, sd.dtype)
+        return jax.lax.fori_loop(0, n_iters, lambda i, e: one_iter(e), env)
+
+    def _launch_loop(self, body_fn, n_iters, carry, *, stream: int = 0,
+                     donate_keys=()):
         # the jitted whole-loop is cached ON body_fn so it lives exactly
         # as long as the compiled plan that owns the closure (a cache on
         # the backend would pin every program forever: the jit references
@@ -300,39 +351,23 @@ class JaxDeviceBackend(Backend):
         per_fn = getattr(body_fn, "_launch_loop_cache", None)
         if per_fn is None:
             per_fn = body_fn._launch_loop_cache = {}
-        jitted = per_fn.get(n_iters)
+        dkeys = (tuple(sorted(k for k in donate_keys if k in carry))
+                 if self.donate else ())
+        jitted = per_fn.get((n_iters, dkeys))
         if jitted is None:
-            jax = self._jax
+            def whole(donated, kept):
+                env = dict(kept)
+                env.update(donated)
+                return self.loop_in_body(body_fn, n_iters, env)
 
-            def one_iter(env):
-                # optimization_barrier fences each iteration: without it
-                # XLA hoists loop-invariant work (CSE/LICM) and re-fuses
-                # across iterations, which changes FMA rounding and breaks
-                # the bitwise-equality contract with the per-iteration
-                # interpreted/segment paths.  Each iteration compiles as
-                # the same isolated program a single segment launch would.
-                env = jax.lax.optimization_barrier(dict(env))
-                return jax.lax.optimization_barrier(dict(body_fn(env)))
-
-            def whole(env):
-                # body-defined carry slots (written before any read on
-                # every valid plan) are discovered abstractly and
-                # zero-initialized, so EVERY iteration runs inside the
-                # fori_loop — peeling iteration 0 to top level instead
-                # would compile it in a different XLA context than the
-                # while body and break bitwise equality (seen on CPU)
-                shapes = jax.eval_shape(body_fn, env)
-                env = dict(env)
-                import jax.numpy as jnp
-                for k, sd in shapes.items():
-                    if k not in env:
-                        env[k] = jnp.zeros(sd.shape, sd.dtype)
-                return jax.lax.fori_loop(
-                    0, n_iters, lambda i, e: one_iter(e), env)
-
-            jitted = jax.jit(whole)
-            per_fn[n_iters] = jitted
-        out = jitted(carry)
+            # rewritten loop state is donated to the launch (the caller
+            # only keeps the final carry), mirroring segment donation
+            jitted = self._jax.jit(whole,
+                                   donate_argnums=(0,) if dkeys else ())
+            per_fn[(n_iters, dkeys)] = jitted
+        donated = {k: carry[k] for k in dkeys}
+        kept = {k: v for k, v in carry.items() if k not in dkeys}
+        out = jitted(donated, kept)
         for v in out.values():
             self._record(stream, Event(payload=v))
         return out

@@ -54,7 +54,7 @@ from .executor import (ExecStats, PlanExecutionError, _Slot, _nest,
 from .ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, GroupDecl,
                  Plan, PlanOp, Program, Release, Synchronize)
 
-__all__ = ["compile_plan", "CompiledPlan"]
+__all__ = ["compile_plan", "CompiledPlan", "fusable_loops"]
 
 
 # --------------------------------------------------------------------------
@@ -183,17 +183,27 @@ _DUMMY = "__dummy__"    # carry-key prefix for pruned (dead) declared reads
 
 @dataclasses.dataclass
 class _FusedLoop:
-    """A whole loop rolled into one backend dispatch.
+    """A whole loop (or a nest of pure loops) rolled into one dispatch.
 
-    ``seg`` is the body's (single, pure-device) segment; the carry is a
-    dict over the segment's entry variables (+ ``_DUMMY``-prefixed
-    placeholders for pruned reads), and after the launch the final device
-    value of every body-written variable is read back out of the carry.
+    ``seg`` is the innermost body's (single, pure-device) segment; the
+    carry is a dict over the segment's entry variables (+
+    ``_DUMMY``-prefixed placeholders for pruned reads), and after the
+    launch the final device value of every body-written variable is read
+    back out of the carry.  For a nested fusion ``body_fn`` is the outer
+    body (an in-trace loop over the inner body via
+    ``Backend.loop_in_body``) and ``logical_iters`` is the total
+    per-launch iteration multiplier (product of the nest's trip counts)
+    used for logical stats parity.
     """
     loop_id: int
     n_iters: int
     seg: _Segment
     body_fn: Any            # carry dict -> carry dict, over backend.xp
+    logical_iters: int = 0  # == n_iters unless nested
+
+    def __post_init__(self):
+        if not self.logical_iters:
+            self.logical_iters = self.n_iters
 
 
 def _make_loop_body(seg: _Segment, program: Program, xp):
@@ -211,20 +221,76 @@ def _make_loop_body(seg: _Segment, program: Program, xp):
     return body
 
 
+def fusable_loops(p: Plan) -> set:
+    """Loop ids the compiled path will actually roll whole — the STATIC
+    twin of ``_try_fuse_loop`` below (kept adjacent so the two rules
+    change together; the tuner's cost model prices dispatches with it).
+    A loop qualifies iff it is planner-pure AND its body is either
+    blocks/syncs only (lowers to one segment) or exactly one fusable
+    inner loop with nothing beside it (lowers to one nested node)."""
+    pure = set(p.meta.get("pure_device_loops", ()))
+    children: Dict[int, List[int]] = {}
+    content: Dict[int, int] = {}
+    stack: List[int] = []
+    for op in p.ops:
+        if op.kind == "loop_begin":
+            if stack:
+                children.setdefault(stack[-1], []).append(op.loop_id)
+            stack.append(op.loop_id)
+            children.setdefault(op.loop_id, [])
+            content.setdefault(op.loop_id, 0)
+        elif op.kind == "loop_end":
+            stack.pop()
+        elif stack and op.kind == "block":
+            content[stack[-1]] += 1
+
+    def ok(lid: int) -> bool:
+        if lid not in pure:
+            return False
+        kids = children.get(lid, [])
+        if not kids:
+            return content.get(lid, 0) > 0
+        return (len(kids) == 1 and content.get(lid, 0) == 0
+                and ok(kids[0]))
+
+    return {lid for lid in pure if ok(lid)}
+
+
+def _make_nested_body(child: _FusedLoop, be: Backend):
+    """Outer-loop body for a nested fusion: one in-trace sweep of the
+    inner fused loop (``lax.fori_loop`` on device backends, a Python
+    loop on numpy — backend-uniform via ``Backend.loop_in_body``)."""
+    def body(env):
+        return be.loop_in_body(child.body_fn, child.n_iters, env)
+    return body
+
+
 def _try_fuse_loop(loop_id: int, inner: List[Tuple], p: Plan,
                    be: Backend) -> Optional[Tuple]:
     """Return a ``("fused_loop", _FusedLoop)`` node when the loop body is
     provably pure-device: the planner marked the loop invariant AND the
-    body lowered to exactly one segment with blocks but no transfers.
-    (The structural check keeps hand-mutated plans safe: a load spliced
-    into the body disqualifies it regardless of the stale meta.)"""
+    body lowered to exactly one segment with blocks but no transfers —
+    or to exactly one already-fused inner loop, in which case the nest
+    rolls into a single nested ``fori_loop`` launch.  (The structural
+    check keeps hand-mutated plans safe: a load spliced into the body
+    disqualifies it regardless of the stale meta.)"""
     if loop_id not in p.meta.get("pure_device_loops", ()):
         return None
-    if len(inner) != 1 or inner[0][0] != "seg":
+    if len(inner) != 1:
+        return None
+    n_iters = p.program.loops[loop_id].n_iters
+    if n_iters < 1:
+        return None
+    if inner[0][0] == "fused_loop":
+        child: _FusedLoop = inner[0][1]
+        return ("fused_loop", _FusedLoop(
+            loop_id=loop_id, n_iters=n_iters, seg=child.seg,
+            body_fn=_make_nested_body(child, be),
+            logical_iters=n_iters * child.logical_iters))
+    if inner[0][0] != "seg":
         return None
     seg: _Segment = inner[0][1]
-    n_iters = p.program.loops[loop_id].n_iters
-    if not seg.blocks or n_iters < 1:
+    if not seg.blocks:
         return None
     if any(it[0] in ("load", "store") for it in seg.items):
         return None
@@ -358,10 +424,15 @@ class CompiledPlan:
                 slot.valid_device = True
             carry[v] = slot.device
 
+        # rewritten entry vars are safe to donate: after the launch the
+        # driver only keeps the carry's new value (opt-in per backend)
+        donate = tuple(v for tag, v in seg.arg_spec
+                       if tag == "entry" and v in seg.final_writes)
         t = time.perf_counter()
-        out = be.launch_loop(node.body_fn, node.n_iters, carry)
+        out = be.launch_loop(node.body_fn, node.n_iters, carry,
+                             donate_keys=donate)
         stats.kernel_time += time.perf_counter() - t
-        stats.kernel_calls += len(seg.blocks) * node.n_iters
+        stats.kernel_calls += len(seg.blocks) * node.logical_iters
         stats.fused_launches += 1
 
         for w in seg.final_writes:
@@ -378,7 +449,7 @@ class CompiledPlan:
                 be.sync(d.stream)
                 be.sync(0)
                 stats.sync_time += time.perf_counter() - t
-                stats.syncs += node.n_iters
+                stats.syncs += node.logical_iters
 
     def _run_segment(self, seg: _Segment, env, stats: ExecStats,
                      check: bool) -> None:

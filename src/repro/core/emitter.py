@@ -36,6 +36,26 @@ def emit(plan: Plan) -> str:
     def w(s: str) -> None:
         lines.append("    " * indent + s)
 
+    # plan-space autotuner verdict (ISSUE 4): which candidate this source
+    # is, and what the cost model predicted/measured for it
+    tuning = plan.meta.get("tuning")
+    if tuning:
+        cands = [c for c in tuning["candidates"] if c.get("valid")]
+        chosen = next((c for c in cands
+                       if c["label"] == tuning["chosen"]), None)
+        w(f"#pragma omp2hmpp tuned, variant={tuning['chosen']}, "
+          f"explored={len(cands)} candidates, "
+          f"backend={tuning['backend']}")
+        if chosen is not None:
+            meas = ("" if chosen.get("measured_s") is None else
+                    f", measured={chosen['measured_s'] * 1e3:.3f}ms")
+            w(f"#pragma omp2hmpp cost, "
+              f"predicted={chosen['predicted_s'] * 1e3:.3f}ms"
+              f" (transfer={chosen['transfer_s'] * 1e3:.3f}"
+              f" + dispatch={chosen['dispatch_s'] * 1e3:.3f}"
+              f" + kernel={chosen['kernel_s'] * 1e3:.3f}){meas}")
+        w("")
+
     # codelet declarations (outlined kernels), paper Table 2 lines 1-27
     for blk in prog.offload_blocks():
         g = None

@@ -240,13 +240,24 @@ class Plan:
     ops: List[PlanOp]
     groups: Dict[int, Tuple[int, ...]]       # group id -> offload block idxs
     io_table: Dict[int, Dict[str, VarIO]]    # block idx -> var -> io
-    # meta keys set by the planner:
-    #   "optimize"          — True for the optimized policy
-    #   "pure_device_loops" — loop ids whose body holds only offload
+    # meta keys set by the planner pass pipeline (repro.core.passes):
+    #   "optimize"           — True for any non-naive policy (legacy)
+    #   "policy"             — placement policy name that produced this
+    #       plan ("optimized" / "naive" / "grouped" / registered ones)
+    #   "n_transfer_streams" — stream count the StreamAssignPass used
+    #   "pure_device_loops"  — loop ids whose body holds only offload
     #       blocks and metadata/sync directives (no host blocks, no
     #       AdvancedLoad/DelegateStore/Release).  Together with
     #       ``program.loops[lid].n_iters`` this is what the compiled path
-    #       needs to roll the whole loop into one fused launch.
+    #       needs to roll the whole loop (or nest) into one fused launch.
+    #   "var_nbytes"         — concrete byte size of every program var
+    #       (the cost model's raw material)
+    # and by the plan-space tuner (repro.core.tuner):
+    #   "tuning"             — {"chosen", "backend", "hw", "candidates"}:
+    #       the ranked candidate table, each entry carrying the cost
+    #       breakdown (transfer_s/dispatch_s/kernel_s/predicted_s) and
+    #       measured_s when the candidate was run
+    #   "fuse_loops"/"donate" — how the winning plan wants executing
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def directives(self, cls=None) -> List[Directive]:
@@ -261,3 +272,19 @@ class Plan:
     def pure_device_loops(self) -> Tuple[int, ...]:
         """Loop ids the planner proved transfer-free (fusable whole)."""
         return tuple(self.meta.get("pure_device_loops", ()))
+
+    def predicted_cost(self) -> Optional[Dict[str, Any]]:
+        """The tuner's cost record for this plan (None if not tuned)."""
+        tuning = self.meta.get("tuning")
+        if not tuning:
+            return None
+        for c in tuning["candidates"]:
+            if c["label"] == tuning["chosen"]:
+                return c
+        return None
+
+    def tuning_table(self) -> List[Dict[str, Any]]:
+        """Ranked candidate records from the plan-space exploration
+        (empty if this plan was not produced by ``policy="auto"``)."""
+        tuning = self.meta.get("tuning")
+        return list(tuning["candidates"]) if tuning else []

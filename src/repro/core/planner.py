@@ -1,536 +1,81 @@
 """Transfer-directive placement — the paper's §2 optimization.
 
-Given a ``Program`` and its ``ProgramAnalysis``, produce a ``Plan``:
+Given a ``Program``, produce a ``Plan`` through the composable pass
+pipeline in ``repro.core.passes`` (linearize → placement policy →
+simulate-and-fix → noupdate → stream assignment → group head/tail →
+purity marking).  The monolithic planner of PRs 0-2 survives as the
+individual passes; this module is the thin policy-selection entry point:
 
-* ``AdvancedLoad`` for every codelet input, hoisted **as early as possible**
-  (right after the last host write, lifted out of loop nests to the deepest
-  block shared with the callsite — Figs. 2, 4b),
-* ``DelegateStore`` for every codelet output with a downstream host read,
-  sunk **as late as possible** (right before the first host read, lifted to
-  just before the reader's unshared loop nest — Figs. 3, 5b),
-* ``noupdate`` elision for device-resident values (Table 2),
-* async ``Callsite`` + ``Synchronize`` placed before the first dependent
-  host use,
-* one ``GroupDecl`` (+ ``mapbyname``) per connected component of codelets
-  sharing data, and a final ``Release``.
+``plan(program)`` / ``plan(program, policy="optimized")``
+    The paper's optimized placement: ``AdvancedLoad`` hoisted ASAP
+    (Figs. 2/4b), ``DelegateStore`` sunk ALAP (Figs. 3/5b), ``noupdate``
+    elision for device-resident values (Table 2), async callsites with
+    ``Synchronize`` before first host use, per-component groups.
 
-``plan(program, optimize=False)`` is the paper's *baseline* policy
-(Figs. 4a/5a): load every input at the callsite, store every output right
-after it, synchronous, no residency reuse.
+``plan(program, optimize=False)`` / ``policy="naive"``
+    The paper's baseline (Figs. 4a/5a): every transfer at the callsite,
+    synchronous, no residency reuse.
 
-Correctness is enforced by an abstract-interpretation pass
-(``_simulate_and_fix``): it walks the plan (loop bodies twice, to fixed
-point), tracking per-variable host/device validity, drops loads that are
-redundant on *every* execution (these become ``noupdate`` args), and inserts
-emergency transfers if a placement gap is found (which the property tests
-then flag, since an optimal plan should never need them).
+``plan(program, policy="grouped")``
+    Optimized placement with every codelet in ONE directive group.
+
+``plan(program, policy="auto", backend=...)``
+    The plan-space explorer (``repro.core.tuner``): enumerate candidate
+    plans across placement/stream/fusion/donation axes, rank them with
+    the roofline-backed cost model, measure, and return the winner with
+    the full ranked table in ``plan.meta["tuning"]``.
+
+Correctness of every policy is enforced by the shared
+``SimulateFixPass`` (see ``repro.core.passes.simulate``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Optional
 
-from .analysis import ProgramAnalysis, analyze, common_prefix
-from .ir import (AdvancedLoad, Block, BlockKind, Callsite, DelegateStore,
-                 GroupDecl, Plan, PlanOp, Program, Release, Synchronize,
-                 VarIO)
+from .analysis import ProgramAnalysis
+from .ir import (AdvancedLoad, Callsite, DelegateStore, Plan, Program,
+                 Synchronize)
+from .passes import Pipeline
 
 __all__ = ["plan", "naive_plan", "transfer_summary"]
 
 
-# --------------------------------------------------------------------------
-# Skeleton: linearized program with loop markers.
-# --------------------------------------------------------------------------
-
-def _linearize(program: Program) -> List[PlanOp]:
-    ops: List[PlanOp] = []
-    open_path: Tuple[int, ...] = ()
-    for blk in program.blocks:
-        path = blk.loop_path
-        keep = common_prefix(open_path, path)
-        for lid in reversed(open_path[len(keep):]):
-            ops.append(PlanOp(kind="loop_end", loop_id=lid))
-        for lid in path[len(keep):]:
-            ops.append(PlanOp(kind="loop_begin", loop_id=lid))
-        open_path = path
-        ops.append(PlanOp(kind="block", block_idx=blk.idx))
-    for lid in reversed(open_path):
-        ops.append(PlanOp(kind="loop_end", loop_id=lid))
-    return ops
-
-
-def _pos_of_block(ops: List[PlanOp], idx: int) -> int:
-    for i, op in enumerate(ops):
-        if op.kind == "block" and op.block_idx == idx:
-            return i
-    raise KeyError(idx)
-
-
-def _depth_at(ops: List[PlanOp], pos: int) -> Tuple[int, ...]:
-    path: List[int] = []
-    for op in ops[:pos]:
-        if op.kind == "loop_begin":
-            path.append(op.loop_id)
-        elif op.kind == "loop_end":
-            path.pop()
-    return tuple(path)
-
-
-def _after_hoisted(ops: List[PlanOp], blk_pos: int,
-                   target_path: Tuple[int, ...]) -> int:
-    """Insertion index just after ``blk_pos`` once all loops deeper than
-    ``target_path`` have closed (ASAP placement, Fig. 2)."""
-    path = list(_depth_at(ops, blk_pos))
-    i = blk_pos + 1
-    while tuple(path) != tuple(target_path) and i < len(ops):
-        op = ops[i]
-        if op.kind == "loop_begin":
-            path.append(op.loop_id)
-        elif op.kind == "loop_end":
-            path.pop()
-        i += 1
-    return i
-
-
-def _before_hoisted(ops: List[PlanOp], blk_pos: int,
-                    target_path: Tuple[int, ...]) -> int:
-    """Insertion index just before ``blk_pos``, lifted before any loop_begin
-    opening loops deeper than ``target_path`` (ALAP placement, Fig. 3)."""
-    path = list(_depth_at(ops, blk_pos))
-    i = blk_pos
-    while tuple(path) != tuple(target_path) and i > 0:
-        op = ops[i - 1]
-        if op.kind == "loop_begin":
-            path.pop()
-        elif op.kind == "loop_end":
-            path.append(op.loop_id)
-        i -= 1
-    return i
-
-
-# --------------------------------------------------------------------------
-# Placement computation.
-# --------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class _Insertion:
-    pos: int           # index into skeleton ops; inserted before ops[pos]
-    order: int         # tie-break: stable order of creation
-    op: PlanOp
-
-
-def _place_optimized(an: ProgramAnalysis, ops: List[PlanOp]
-                     ) -> List[_Insertion]:
-    program = an.program
-    ins: List[_Insertion] = []
-    order = [0]
-
-    def add(pos: int, directive) -> None:
-        ins.append(_Insertion(pos, order[0], PlanOp("directive",
-                                                    directive=directive)))
-        order[0] += 1
-
-    seen_loads: Set[Tuple[str, int]] = set()       # (var, pos) dedupe
-    seen_stores: Set[Tuple[str, int]] = set()
-
-    def straight_load(var, g, blk, lw):
-        """ASAP load covering the straight-line (iteration-1) path."""
-        if lw is None:
-            pos, hoisted = 0, ()
-        else:
-            target = common_prefix(lw.loop_path, blk.loop_path)
-            writer_pos = _pos_of_block(ops, lw.block_idx)
-            pos = _after_hoisted(ops, writer_pos, target)
-            hoisted = lw.loop_path[len(target):]
-        if (var, pos) not in seen_loads:
-            seen_loads.add((var, pos))
-            add(pos, AdvancedLoad(var=var, group=g, asynchronous=True,
-                                  hoisted_from=hoisted))
-
-    for blk in program.offload_blocks():
-        g = an.group_of[blk.idx]
-        blk_pos = _pos_of_block(ops, blk.idx)
-
-        # ---- inputs: AdvancedLoad, hoisted ASAP (Fig. 2 / 4b) ------------
-        # The dynamic last write at the callsite is lw (straight-line,
-        # iteration 1) and — when the callsite sits in a loop whose body
-        # also writes the var AFTER it — lwc (loop-carried, iterations ≥ 2).
-        for var, io in sorted(an.io_table[blk.idx].items()):
-            if io is VarIO.OUT:
-                continue  # never read by the codelet: no upload (paper: E)
-            lw = an.last_write_before(var, blk.idx)
-            lwc = an.last_carried_write(var, blk)
-            straight_resident = (lw is not None
-                                 and lw.kind is BlockKind.OFFLOAD)
-            if lwc is None:
-                if straight_resident:
-                    continue          # noupdate (tagged later)
-                straight_load(var, g, blk, lw)
-            elif lwc.kind is BlockKind.OFFLOAD:
-                # iterations ≥ 2 are device-resident; cover iteration 1
-                if not straight_resident:
-                    straight_load(var, g, blk, lw)
-            else:
-                # carried HOST write: iterations ≥ 2 need a fresh upload
-                if straight_resident:
-                    # iter 1 resident → ASAP after the carried writer
-                    # (end of body i covers body i+1's read)
-                    target = common_prefix(lwc.loop_path, blk.loop_path)
-                    wpos = _pos_of_block(ops, lwc.block_idx)
-                    pos = _after_hoisted(ops, wpos, target)
-                    hoisted = lwc.loop_path[len(target):]
-                else:
-                    # host-fresh on every path → one load just before the
-                    # callsite (count-optimal; matches naive's count here)
-                    pos, hoisted = blk_pos, ()
-                if (var, pos) not in seen_loads:
-                    seen_loads.add((var, pos))
-                    add(pos, AdvancedLoad(var=var, group=g,
-                                          asynchronous=True,
-                                          hoisted_from=hoisted))
-
-        # ---- outputs: DelegateStore, sunk ALAP (Fig. 3 / 5b) -------------
-        for var, io in sorted(an.io_table[blk.idx].items()):
-            if io is VarIO.IN:
-                continue
-            carried_r = an.carried_host_read(var, blk)
-            if carried_r is not None:
-                # a host block EARLIER in the shared loop reads next
-                # iteration's value → store right after the callsite
-                pos = blk_pos + 1
-                if (var, pos) not in seen_stores:
-                    seen_stores.add((var, pos))
-                    add(pos, Synchronize(block_idx=blk.idx, group=g))
-                    add(pos, DelegateStore(var=var, group=g))
-            reader = an.first_host_read_after(var, blk.idx)
-            if reader is None:
-                if var in getattr(program, "outputs", ()):  # virtual end read
-                    killed = any(
-                        ev.is_write and ev.block_idx > blk.idx
-                        for ev in an.events.get(var, ()))
-                    if killed:
-                        continue
-                    pos = len(ops)
-                    add(pos, Synchronize(block_idx=blk.idx, group=g))
-                    add(pos, DelegateStore(var=var, group=g))
-                continue  # dead on host: no download (paper: A)
-            target = common_prefix(blk.loop_path, reader.loop_path)
-            reader_pos = _pos_of_block(ops, reader.block_idx)
-            pos = _before_hoisted(ops, reader_pos, target)
-            if (var, pos) in seen_stores:
-                continue
-            seen_stores.add((var, pos))
-            hoisted = reader.loop_path[len(target):]
-            # synchronize the async callsite just before its first host use
-            add(pos, Synchronize(block_idx=blk.idx, group=g))
-            add(pos, DelegateStore(var=var, group=g, hoisted_from=hoisted))
-
-    return ins
-
-
-def _place_naive(an: ProgramAnalysis, ops: List[PlanOp]) -> List[_Insertion]:
-    """Paper Figs. 4a/5a: all transfers at the callsite, synchronous."""
-    ins: List[_Insertion] = []
-    order = [0]
-
-    def add(pos, directive):
-        ins.append(_Insertion(pos, order[0], PlanOp("directive",
-                                                    directive=directive)))
-        order[0] += 1
-
-    for blk in an.program.offload_blocks():
-        g = an.group_of[blk.idx]
-        pos = _pos_of_block(ops, blk.idx)
-        for var, io in sorted(an.io_table[blk.idx].items()):
-            if io is not VarIO.OUT:
-                add(pos, AdvancedLoad(var=var, group=g, asynchronous=False))
-        outs = [var for var, io in sorted(an.io_table[blk.idx].items())
-                if io is not VarIO.IN]
-        if outs:
-            # one wait point per callsite (Fig. 5a), then every download —
-            # not a sync per output
-            add(pos + 1, Synchronize(block_idx=blk.idx, group=g))
-            for var in outs:
-                add(pos + 1, DelegateStore(var=var, group=g))
-    return ins
-
-
-def _merge(ops: List[PlanOp], ins: List[_Insertion]) -> List[PlanOp]:
-    out: List[PlanOp] = []
-    by_pos: Dict[int, List[_Insertion]] = {}
-    for i in ins:
-        by_pos.setdefault(i.pos, []).append(i)
-    for pos in by_pos:
-        by_pos[pos].sort(key=lambda x: x.order)
-    for idx in range(len(ops) + 1):
-        for i in by_pos.get(idx, ()):
-            out.append(i.op)
-        if idx < len(ops):
-            out.append(ops[idx])
-    return out
-
-
-# --------------------------------------------------------------------------
-# Abstract interpretation: validate, elide redundant loads, tag noupdate.
-# --------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class _VState:
-    valid_host: bool
-    valid_device: bool
-
-
-def _simulate(program: Program, an: ProgramAnalysis, ops: List[PlanOp],
-              *, naive: bool):
-    """Walk the plan; loop bodies are interpreted twice (the standard
-    2-iteration trick) so cross-iteration residency is exact for programs
-    whose bodies don't change behaviour after iteration 2 (ours don't:
-    block read/write sets are static).
-
-    Returns (always_redundant, gaps) where gaps is a list of
-    (pos, emergency PlanOp) needed for correctness.
-    """
-    state: Dict[str, _VState] = {
-        v: _VState(True, False) for v in program.inputs
-    }
-    load_hits: Dict[int, List[bool]] = {}   # op position -> redundancy flags
-    store_hits: Dict[int, List[bool]] = {}
-    gaps: Dict[Tuple[int, str, str], Tuple[int, PlanOp]] = {}
-
-    # pre-index loop spans
-    spans: Dict[int, Tuple[int, int]] = {}
-    stack: List[Tuple[int, int]] = []
-    for i, op in enumerate(ops):
-        if op.kind == "loop_begin":
-            stack.append((op.loop_id, i))
-        elif op.kind == "loop_end":
-            lid, start = stack.pop()
-            spans[lid] = (start, i)
-
-    def exec_range(lo: int, hi: int):
-        i = lo
-        while i < hi:
-            op = ops[i]
-            if op.kind == "loop_begin":
-                start, end = spans[op.loop_id]
-                for _ in range(2):           # 2-iteration abstraction
-                    exec_range(start + 1, end)
-                i = end + 1
-                continue
-            if op.kind == "directive":
-                d = op.directive
-                if isinstance(d, AdvancedLoad):
-                    st = state.setdefault(d.var, _VState(False, False))
-                    if not st.valid_host:
-                        # a host copy is required; upstream store missing
-                        raise _PlanGap(
-                            f"load of {d.var!r} with no valid host copy")
-                    load_hits.setdefault(i, []).append(st.valid_device)
-                    st.valid_device = True
-                elif isinstance(d, DelegateStore):
-                    st = state.setdefault(d.var, _VState(False, False))
-                    if not st.valid_device:
-                        raise _PlanGap(
-                            f"store of {d.var!r} with no valid device copy")
-                    store_hits.setdefault(i, []).append(st.valid_host)
-                    st.valid_host = True
-            elif op.kind == "block":
-                blk = program.blocks[op.block_idx]
-                on_device = blk.kind is BlockKind.OFFLOAD
-                for v in blk.effective_reads():
-                    st = state.setdefault(v, _VState(False, False))
-                    ok = st.valid_device if on_device else st.valid_host
-                    if not ok:
-                        src_ok = st.valid_host if on_device else \
-                            st.valid_device
-                        if not src_ok:
-                            raise _PlanGap(
-                                f"{blk.name!r} reads {v!r} but no valid copy "
-                                f"exists anywhere")
-                        fix = (AdvancedLoad(v, group=0, asynchronous=False)
-                               if on_device else DelegateStore(v, group=0))
-                        key = (i, v, type(fix).__name__)
-                        gaps.setdefault(
-                            key, (i, PlanOp("directive", directive=fix)))
-                        if on_device:
-                            st.valid_device = True
-                        else:
-                            st.valid_host = True
-                for v in blk.writes:
-                    st = state.setdefault(v, _VState(False, False))
-                    if on_device:
-                        st.valid_device, st.valid_host = True, False
-                    else:
-                        st.valid_host, st.valid_device = True, False
-            i += 1
-
-    exec_range(0, len(ops))
-    always_redundant = {
-        pos for pos, flags in load_hits.items() if flags and all(flags)
-    }
-    always_redundant |= {
-        pos for pos, flags in store_hits.items() if flags and all(flags)
-    }
-    return always_redundant, list(gaps.values())
-
-
-class _PlanGap(Exception):
-    pass
-
-
-def _simulate_and_fix(program: Program, an: ProgramAnalysis,
-                      ops: List[PlanOp], *, naive: bool,
-                      elide: bool) -> List[PlanOp]:
-    for _round in range(8):
-        try:
-            redundant, gaps = _simulate(program, an, ops, naive=naive)
-        except _PlanGap as e:
-            raise RuntimeError(f"planner produced an invalid plan: {e}")
-        if gaps:
-            # insert emergency transfers (kept rare by construction)
-            for pos, op in sorted(gaps, key=lambda t: -t[0]):
-                ops = ops[:pos] + [op] + ops[pos:]
-            continue
-        if elide and redundant:
-            ops = [op for i, op in enumerate(ops) if i not in redundant]
-            continue
-        return ops
-    raise RuntimeError("planner failed to converge")
-
-
-def _tag_noupdate(program: Program, an: ProgramAnalysis,
-                  ops: List[PlanOp]) -> List[PlanOp]:
-    """Annotate each callsite with the inputs that arrive device-resident
-    (i.e. no AdvancedLoad between the last producer and the callsite) —
-    the paper's ``args[x].noupdate=true``."""
-    loaded_since_host_write: Set[str] = set()
-    out: List[PlanOp] = []
-    # track which vars have a load op anywhere (vs pure residency)
-    for op in ops:
-        if op.kind == "block":
-            blk = program.blocks[op.block_idx]
-            if blk.kind is BlockKind.OFFLOAD:
-                io = an.io_table[blk.idx]
-                noup = tuple(
-                    v for v, d in sorted(io.items())
-                    if d is not VarIO.OUT and v not in
-                    loaded_since_host_write
-                )
-                out.append(PlanOp("directive", directive=Callsite(
-                    block_idx=blk.idx, group=an.group_of[blk.idx],
-                    io=tuple(sorted((v, d.value) for v, d in io.items())),
-                    noupdate=noup, asynchronous=True)))
-                out.append(op)
-                for v in blk.writes:
-                    loaded_since_host_write.discard(v)
-                continue
-            else:
-                for v in blk.writes:
-                    loaded_since_host_write.discard(v)
-        if op.kind == "directive" and isinstance(op.directive, AdvancedLoad):
-            loaded_since_host_write.add(op.directive.var)
-        out.append(op)
-    return out
-
-
-# --------------------------------------------------------------------------
-# Stream assignment — one logical transfer stream per group.
-# --------------------------------------------------------------------------
-
-def _assign_streams(ops: List[PlanOp]) -> List[PlanOp]:
-    """Give every transfer/sync directive a logical stream id derived from
-    its group: stream 0 is the compute stream, groups round-robin over the
-    transfer streams 1..N so a stream-aware backend double-buffers uploads
-    of independent groups and ``Synchronize`` waits only its own queue."""
-    def stream_of(group: int) -> int:
-        return 1 + (group % 2)
-
-    out: List[PlanOp] = []
-    for op in ops:
-        d = op.directive
-        if op.kind == "directive" and isinstance(
-                d, (AdvancedLoad, DelegateStore, Synchronize)):
-            d = dataclasses.replace(d, stream=stream_of(d.group))
-            op = PlanOp("directive", directive=d)
-        out.append(op)
-    return out
-
-
-# --------------------------------------------------------------------------
-# Loop-invariance marking — proof the compiler relies on for whole-loop
-# lowering (lax.fori_loop over the body).
-# --------------------------------------------------------------------------
-
-def _pure_device_loops(program: Program,
-                       ops: List[PlanOp]) -> Tuple[int, ...]:
-    """Loop ids whose body is pure device work in THIS plan: only offload
-    blocks and metadata/sync directives inside — no host blocks and no
-    ``AdvancedLoad``/``DelegateStore``/``Release``.  The compiled path may
-    roll such a loop whole into one fused launch, because no per-iteration
-    op needs the host."""
-    pure: Dict[int, bool] = {}
-    stack: List[int] = []
-    for op in ops:
-        if op.kind == "loop_begin":
-            stack.append(op.loop_id)
-            pure.setdefault(op.loop_id, True)
-        elif op.kind == "loop_end":
-            stack.pop()
-        elif stack:
-            ok = True
-            if op.kind == "block":
-                ok = program.blocks[op.block_idx].kind is BlockKind.OFFLOAD
-            elif op.kind == "directive":
-                ok = not isinstance(
-                    op.directive, (AdvancedLoad, DelegateStore, Release))
-            if not ok:
-                for lid in stack:
-                    pure[lid] = False
-    return tuple(sorted(lid for lid, v in pure.items() if v))
-
-
-# --------------------------------------------------------------------------
-# Entry points.
-# --------------------------------------------------------------------------
-
 def plan(program: Program, *, optimize: bool = True,
-         analysis: Optional[ProgramAnalysis] = None) -> Plan:
-    an = analysis or analyze(program)
-    skeleton = _linearize(program)
-    ins = (_place_optimized if optimize else _place_naive)(an, skeleton)
-    ops = _merge(skeleton, ins)
-    ops = _simulate_and_fix(program, an, ops, naive=not optimize,
-                            elide=optimize)
-    ops = _tag_noupdate(program, an, ops)
-    ops = _assign_streams(ops)
+         policy: Optional[str] = None,
+         analysis: Optional[ProgramAnalysis] = None,
+         n_streams: Optional[int] = None, backend=None,
+         **tune_kwargs) -> Plan:
+    """Plan ``program`` under a placement policy (see module docstring).
 
-    # group declarations up front, releases at the end (paper Table 2)
-    head: List[PlanOp] = []
-    for g, blks in sorted(an.groups.items()):
-        shared: Set[str] = set()
-        seen: Set[str] = set()
-        for bi in blks:
-            for v in set(program.blocks[bi].effective_reads()) | \
-                    set(program.blocks[bi].writes):
-                if v in seen:
-                    shared.add(v)
-                seen.add(v)
-        head.append(PlanOp("directive", directive=GroupDecl(
-            group=g, mapbyname=tuple(sorted(shared)), target="TPU")))
-    tail = [PlanOp("directive", directive=Release(group=g))
-            for g in sorted(an.groups)]
-
-    all_ops = head + ops + tail
-    return Plan(program=program, ops=all_ops,
-                groups=an.groups, io_table=an.io_table,
-                meta={"optimize": optimize,
-                      "pure_device_loops":
-                          _pure_device_loops(program, all_ops)})
+    ``optimize`` is the legacy switch (True → "optimized", False →
+    "naive"); ``policy`` overrides it.  ``backend`` and ``tune_kwargs``
+    are only legal with ``policy="auto"`` (see ``repro.core.tuner.tune``
+    for the knobs: axes, ``top_k``, ``reps``, ``measure``); an explicit
+    ``n_streams`` pins the auto policy's stream axis to that value.
+    """
+    if policy is None:
+        policy = "optimized" if optimize else "naive"
+    if policy == "auto":
+        from .tuner import tune
+        if n_streams is not None:
+            tune_kwargs.setdefault("streams", (n_streams,))
+        return tune(program, backend=backend, analysis=analysis,
+                    **tune_kwargs)
+    if tune_kwargs or backend is not None:
+        extra = sorted(tune_kwargs) + (["backend"]
+                                       if backend is not None else [])
+        raise TypeError(
+            f"plan() got tuner-only keyword arguments {extra} with "
+            f"policy={policy!r}; they are only valid with policy='auto'")
+    pl = Pipeline.default(policy, n_streams=2 if n_streams is None
+                          else n_streams).run(program, analysis=analysis)
+    pl.meta["optimize"] = policy != "naive"
+    return pl
 
 
 def naive_plan(program: Program,
                analysis: Optional[ProgramAnalysis] = None) -> Plan:
-    return plan(program, optimize=False, analysis=analysis)
+    return plan(program, policy="naive", analysis=analysis)
 
 
 def transfer_summary(p: Plan) -> Dict[str, int]:

@@ -1,0 +1,348 @@
+"""Plan-space explorer — the search the paper actually describes.
+
+OMP2HMPP's headline result (§3) comes from *exploring the space of
+directive combinations*: the tool emits many candidate HMPP versions and
+picks the best.  This module does that over the pass pipeline
+(``repro.core.passes``): enumerate candidate plans across the axes the
+paper explores —
+
+    placement policy     naive / optimized / grouped (registry-extensible)
+    transfer streams     1–4 logical upload/download queues
+    loop fusion          whole-loop ``lax.fori_loop`` lowering on/off
+    buffer donation      fused launches donate rewritten inputs on/off
+
+— rank them with a static cost model that reuses the roofline machinery
+(``repro.roofline.analysis``: per-block HLO dot-FLOPs, PCIe/HBM
+bandwidths, launch overhead × dispatch count), optionally refine the
+top-k by measured wall time, and return the winner with the full ranked
+table in ``plan.meta["tuning"]``.
+
+Entry point: ``tune(program, backend=...)``, or equivalently
+``plan(program, policy="auto", backend=...)``.
+
+Candidates that fail the pipeline's ``SimulateFixPass`` (an invalid
+placement) are recorded with ``valid=False`` and are never ranked or
+measured — the explorer only ever returns a simulator-approved plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..roofline.analysis import HW, dot_flops, offload_cost_terms, parse_hlo
+from .analysis import ProgramAnalysis, analyze
+from .backend import Backend, JaxDeviceBackend, get_backend
+from .ir import (AdvancedLoad, BlockKind, DelegateStore, Plan, Program,
+                 Synchronize)
+from .passes import Pipeline
+
+__all__ = ["PlanConfig", "enumerate_configs", "predict_cost", "tune",
+           "winner_exec_kwargs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """One point of the plan space."""
+    policy: str = "optimized"
+    n_streams: int = 2
+    fuse_loops: bool = True
+    donate: bool = False
+
+    @property
+    def label(self) -> str:
+        return (f"{self.policy}/streams{self.n_streams}"
+                f"/{'fuse' if self.fuse_loops else 'nofuse'}"
+                f"/{'donate' if self.donate else 'nodonate'}")
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+DEFAULT_POLICIES: Tuple[str, ...] = ("naive", "optimized", "grouped")
+DEFAULT_STREAMS: Tuple[int, ...] = (1, 2, 3, 4)
+
+
+def enumerate_configs(policies: Sequence[str] = DEFAULT_POLICIES,
+                      streams: Sequence[int] = DEFAULT_STREAMS,
+                      fuse: Sequence[bool] = (True, False),
+                      donate: Sequence[bool] = (False, True)
+                      ) -> List[PlanConfig]:
+    return [PlanConfig(policy=p, n_streams=s, fuse_loops=f, donate=d)
+            for p, s, f, d in itertools.product(policies, streams,
+                                                fuse, donate)]
+
+
+# --------------------------------------------------------------------------
+# Static cost model.
+# --------------------------------------------------------------------------
+
+def _block_flops(program: Program,
+                 shapes: Dict[str, Any]) -> Dict[int, float]:
+    """Per-offload-block FLOPs via the roofline HLO machinery: lower each
+    block body once, parse the optimized HLO, count dot FLOPs.  Falls
+    back to 0 for bodies that fail to lower (the cost model then ranks
+    on transfer + dispatch terms alone, which are the plan-dependent
+    ones anyway)."""
+    out: Dict[int, float] = {}
+    try:
+        import jax
+        import jax.numpy as jnp
+    except Exception:            # pragma: no cover - jax is baked in
+        return {b.idx: 0.0 for b in program.offload_blocks()}
+    for blk in program.offload_blocks():
+        avals = [shapes[v] for v in blk.reads]
+
+        def wrapped(*arrays, _blk=blk):
+            o = _blk.fn(jnp, **dict(zip(_blk.reads, arrays)))
+            return tuple(o[w] for w in _blk.writes)
+
+        try:
+            txt = jax.jit(wrapped).lower(*avals).compile().as_text()
+            out[blk.idx] = dot_flops(parse_hlo(txt))
+        except Exception:
+            out[blk.idx] = 0.0
+    return out
+
+
+def predict_cost(pl: Plan, cfg: PlanConfig,
+                 block_flops: Optional[Dict[int, float]] = None
+                 ) -> Dict[str, Any]:
+    """Walk the plan with loop-trip multipliers and price it:
+
+    * transfer bytes  — Σ nbytes(var) × trip multiplier per load/store,
+    * dispatches      — physical launches: per-iteration blocks and
+      transfers, but a fusable pure-device loop nest counts ONCE per
+      entry when ``cfg.fuse_loops`` (the whole-loop lowering's
+      amortization, mirroring the compiler's structural eligibility),
+    * kernel terms    — logical block launches × per-block HLO FLOPs and
+      touched bytes (plan-invariant; keeps predictions in real units).
+
+    Returns the counters plus ``offload_cost_terms`` (transfer_s /
+    dispatch_s / kernel_s / predicted_s).
+    """
+    from .compile import fusable_loops
+    program = pl.program
+    nb = pl.meta.get("var_nbytes", {})
+    flops_of = block_flops or {}
+    pure = fusable_loops(pl) if cfg.fuse_loops else set()
+
+    h2d_bytes = d2h_bytes = 0
+    loads = stores = syncs = 0
+    kernel_launches = 0          # logical
+    dispatches = 0.0             # physical (fused nests count once)
+    flops = 0.0
+    kernel_bytes = 0.0
+
+    mult_stack: List[int] = []
+    fused_depth = 0
+
+    def mult() -> int:
+        m = 1
+        for n in mult_stack:
+            m *= n
+        return m
+
+    for op in pl.ops:
+        if op.kind == "loop_begin":
+            if fused_depth or op.loop_id in pure:
+                if fused_depth == 0:
+                    # one launch per entry of the nest — times the trip
+                    # count of any enclosing UNFUSED loops (a pure inner
+                    # loop under an impure outer re-launches per outer
+                    # iteration; mult_stack has not pushed this loop yet)
+                    dispatches += mult()
+                fused_depth += 1
+            mult_stack.append(program.loops[op.loop_id].n_iters)
+        elif op.kind == "loop_end":
+            mult_stack.pop()
+            if fused_depth:
+                fused_depth -= 1
+        elif op.kind == "block":
+            blk = program.blocks[op.block_idx]
+            if blk.kind is not BlockKind.OFFLOAD:
+                continue
+            m = mult()
+            kernel_launches += m
+            if fused_depth == 0:
+                dispatches += m
+            flops += flops_of.get(blk.idx, 0.0) * m
+            touched = set(blk.effective_reads()) | set(blk.writes)
+            kernel_bytes += sum(nb.get(v, 0) for v in touched) * m
+        elif op.kind == "directive":
+            d = op.directive
+            m = mult()
+            if isinstance(d, AdvancedLoad):
+                loads += m
+                h2d_bytes += nb.get(d.var, 0) * m
+                dispatches += m
+            elif isinstance(d, DelegateStore):
+                stores += m
+                d2h_bytes += nb.get(d.var, 0) * m
+                dispatches += m
+            elif isinstance(d, Synchronize):
+                syncs += m
+
+    terms = offload_cost_terms(h2d_bytes, d2h_bytes, dispatches, syncs,
+                               flops, kernel_bytes)
+    return {
+        "h2d_bytes": int(h2d_bytes), "d2h_bytes": int(d2h_bytes),
+        "loads": int(loads), "stores": int(stores), "syncs": int(syncs),
+        "kernel_launches": int(kernel_launches),
+        "dispatches": float(dispatches), "flops": float(flops),
+        "kernel_bytes": float(kernel_bytes), **terms,
+    }
+
+
+# --------------------------------------------------------------------------
+# Measurement.
+# --------------------------------------------------------------------------
+
+def _donation_variant(be: Backend, donate: bool) -> Backend:
+    """``be`` with donation switched to ``donate`` (a cached twin when
+    they differ, in EITHER direction — a donate=True backend passed by
+    the caller must not leak donation into nodonate candidates).
+    Backends without a donation concept measure both as themselves."""
+    if isinstance(be, JaxDeviceBackend) and be.donate != donate:
+        attr = "_donate_twin" if donate else "_nodonate_twin"
+        twin = getattr(be, attr, None)
+        if twin is None:
+            twin = type(be)(device=be._device, n_streams=be.n_streams,
+                            donate=donate)
+            setattr(be, attr, twin)
+        return twin
+    return be
+
+
+def _measurable(program: Program) -> bool:
+    return all(type(v).__name__ != "ShapeDtypeStruct"
+               for v in program.inputs.values())
+
+
+def _measure(pl: Plan, cfg: PlanConfig, be: Backend, reps: int) -> float:
+    from .executor import execute
+    kw = dict(mode="compiled", fuse_loops=cfg.fuse_loops,
+              backend=_donation_variant(be, cfg.donate))
+    execute(pl, **kw)                       # warm jits + plan lowering
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        _, s = execute(pl, **kw)
+        best = min(best, s.wall_time)       # steady-state, compile excluded
+    return best
+
+
+def winner_exec_kwargs(pl: Plan, backend: Any = None) -> Dict[str, Any]:
+    """``execute()`` kwargs that honor a tuned plan's chosen variant:
+    compiled mode with the winner's fusion flag, on a donate-enabled
+    twin of ``backend`` when the winner wants donation.  Without this a
+    caller re-running the winner on the plain backend measures the
+    nodonate timing under a donate label."""
+    be = _donation_variant(get_backend(backend),
+                           bool(pl.meta.get("donate")))
+    return dict(mode="compiled",
+                fuse_loops=bool(pl.meta.get("fuse_loops", True)),
+                backend=be)
+
+
+# --------------------------------------------------------------------------
+# The explorer.
+# --------------------------------------------------------------------------
+
+def tune(program: Program, *, backend: Any = None,
+         analysis: Optional[ProgramAnalysis] = None,
+         policies: Sequence[str] = DEFAULT_POLICIES,
+         streams: Sequence[int] = DEFAULT_STREAMS,
+         fuse: Sequence[bool] = (True, False),
+         donate: Sequence[bool] = (False, True),
+         configs: Optional[Sequence[PlanConfig]] = None,
+         measure: bool = True, top_k: Optional[int] = None,
+         reps: int = 2) -> Plan:
+    """Explore the plan space; return the winning ``Plan``.
+
+    Candidates with identical ops and execution flags are deduplicated
+    (the merged config labels land in the survivor's ``aliases``); every
+    unique candidate is priced by ``predict_cost`` and — when ``measure``
+    and the program's inputs are concrete — run ``reps`` times on
+    ``backend`` (all of them, or only the predicted top-``top_k``).
+    Candidates are CONFIG-distinct, not always execution-distinct: fuse
+    on a loop-free plan, donate on a non-donating backend, or a streams
+    axis above the backend's physical queue count all measure the same
+    execution under different labels, and noise picks among them — by
+    design, so the table enumerates the full axis grid the paper
+    explores (see ROADMAP for the planned dominance pruning).  The
+    winner is the best *measured* candidate (predicted order breaks
+    ties / decides when measurement is off), returned with:
+
+        plan.meta["tuning"]   {"chosen", "backend", "hw", "candidates"}
+                              — candidates ranked by predicted cost,
+                              each with predicted AND measured seconds
+        plan.meta["fuse_loops"] / ["donate"]
+                              — how the winner wants to be executed
+    """
+    an = analysis or analyze(program)
+    be = get_backend(backend)
+    cfg_list = list(configs) if configs is not None else enumerate_configs(
+        policies, streams, fuse, donate)
+    if not cfg_list:
+        raise ValueError("tune() needs at least one candidate config")
+
+    flops_cache: Optional[Dict[int, float]] = None
+    records: List[Dict[str, Any]] = []
+    plans: Dict[str, Plan] = {}
+    seen: Dict[Tuple, Dict[str, Any]] = {}
+
+    for cfg in cfg_list:
+        base = {"label": cfg.label, "config": cfg.as_dict(),
+                "aliases": [], "valid": True, "error": None,
+                "measured_s": None, "rank": None}
+        try:
+            pl = Pipeline.default(cfg.policy, n_streams=cfg.n_streams
+                                  ).run(program, analysis=an)
+        except (RuntimeError, ValueError) as e:
+            base.update(valid=False, error=str(e))
+            records.append(base)
+            continue
+        # the ops tuple itself (frozen dataclasses) keys the dedupe —
+        # exact, unlike its hash, which could collide two distinct plans
+        key = (tuple(pl.ops), cfg.fuse_loops, cfg.donate)
+        if key in seen:
+            seen[key]["aliases"].append(cfg.label)
+            continue
+        if flops_cache is None:
+            flops_cache = _block_flops(program, an.shapes)
+        base.update(predict_cost(pl, cfg, flops_cache))
+        seen[key] = base
+        records.append(base)
+        plans[cfg.label] = pl
+
+    valid = [r for r in records if r["valid"]]
+    if not valid:
+        raise RuntimeError(
+            "plan-space exploration found no valid candidate: "
+            + "; ".join(f"{r['label']}: {r['error']}" for r in records))
+    valid.sort(key=lambda r: r["predicted_s"])
+    for i, r in enumerate(valid):
+        r["rank"] = i + 1
+
+    if measure and _measurable(program):
+        to_measure = valid if top_k is None else valid[:max(1, top_k)]
+        for r in to_measure:
+            cfg = PlanConfig(**r["config"])
+            r["measured_s"] = _measure(plans[r["label"]], cfg, be, reps)
+
+    measured = [r for r in valid if r["measured_s"] is not None]
+    chosen = (min(measured, key=lambda r: r["measured_s"]) if measured
+              else valid[0])
+
+    best = plans[chosen["label"]]
+    best.meta["tuning"] = {
+        "chosen": chosen["label"],
+        "backend": be.name,
+        "hw": {k: HW[k] for k in ("pcie_bw", "hbm_bw", "peak_flops_bf16",
+                                  "launch_overhead_s", "sync_overhead_s")},
+        "candidates": valid + [r for r in records if not r["valid"]],
+    }
+    best.meta["fuse_loops"] = chosen["config"]["fuse_loops"]
+    best.meta["donate"] = chosen["config"]["donate"]
+    best.meta["optimize"] = chosen["config"]["policy"] != "naive"
+    return best

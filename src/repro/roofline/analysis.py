@@ -26,12 +26,20 @@ import re
 from typing import Dict, List, Optional, Tuple
 
 __all__ = ["HW", "parse_hlo", "collective_bytes", "dot_flops",
-           "analytic_model_flops", "analytic_hbm_bytes", "roofline_terms"]
+           "analytic_model_flops", "analytic_hbm_bytes", "roofline_terms",
+           "offload_cost_terms"]
 
 HW = {
     "peak_flops_bf16": 197e12,   # per chip
     "hbm_bw": 819e9,             # bytes/s per chip
     "ici_bw": 50e9,              # bytes/s per link
+    # host<->device interconnect + dispatch constants for the offload
+    # planner's plan-space cost model (repro.core.tuner): effective
+    # PCIe-class link for advancedload/delegatedstore traffic, and the
+    # per-dispatch/per-sync host overheads a fused launch amortizes.
+    "pcie_bw": 16e9,             # bytes/s host<->device
+    "launch_overhead_s": 5e-6,   # per physical dispatch
+    "sync_overhead_s": 2e-6,     # per wait point
 }
 
 _DTYPE_BYTES = {
@@ -226,10 +234,25 @@ def dot_flops(mod: HloModule) -> float:
                 if d:
                     res_elems *= int(d)
             contract = 1
-            ops = re.search(r"dot\((%[\w.\-]+),\s*(%[\w.\-]+)\)", rhs)
+            # operands print as bare names (%a, %b) or with inline
+            # shapes (f32[32,32]{1,0} %a, ...) depending on the HLO
+            # dialect; the operand NAMES are the last thing before each
+            # comma either way, so pull them out positionally
+            mdot = re.search(r"\bdot\((.*?)\)", rhs)
             mcd = re.search(r"rhs_contracting_dims=\{([\d,]*)\}", rhs)
-            if ops and mcd:
-                rhs_dims = table.get(ops.group(2))
+            if mdot and mcd:
+                names = re.findall(r"%[\w.\-]+", mdot.group(1))
+                rhs_dims = table.get(names[1]) if len(names) >= 2 else None
+                if rhs_dims is None and len(names) >= 2:
+                    # inline-shape dialect: parse the shape prefixing
+                    # the second operand directly
+                    pre = mdot.group(1).rsplit(names[1], 1)[0]
+                    sm2 = None
+                    for sm2 in _SHAPE_RE.finditer(pre):
+                        pass
+                    if sm2 is not None:
+                        rhs_dims = [int(d) for d in
+                                    sm2.group(2).split(",") if d]
                 if rhs_dims:
                     for ci in mcd.group(1).split(","):
                         if ci:
@@ -311,6 +334,39 @@ def analytic_hbm_bytes(cfg, shape, n_devices: int, *,
                                + 4 + 4              # grad write+read fp32
                                + 16 + 2)            # m,v r/w fp32 + w write
     return param_traffic + act
+
+
+def offload_cost_terms(h2d_bytes: float, d2h_bytes: float,
+                       dispatches: float, syncs: float,
+                       flops: float, kernel_bytes: float,
+                       hw: Optional[Dict[str, float]] = None
+                       ) -> Dict[str, float]:
+    """Static cost terms for one offload-plan execution — the roofline
+    model applied to the planner's schedule (used by ``repro.core.tuner``
+    to rank candidate plans):
+
+        transfer_s  = (h2d + d2h bytes) / pcie_bw
+        dispatch_s  = launch_overhead × dispatches + sync_overhead × syncs
+        kernel_s    = max(flops / peak, kernel HBM bytes / hbm_bw)
+
+    ``predicted_s`` sums the three: transfers on this machine are NOT
+    overlapped with the modelled kernel time (the plan's async streams
+    overlap them with *host* work), so a sum — not a max — ranks
+    correctly; what matters for the tuner is the ordering, which the
+    transfer and dispatch terms dominate across candidate plans of the
+    same program (kernel_s is plan-invariant)."""
+    h = hw or HW
+    transfer_s = (h2d_bytes + d2h_bytes) / h["pcie_bw"]
+    dispatch_s = (h["launch_overhead_s"] * dispatches
+                  + h["sync_overhead_s"] * syncs)
+    kernel_s = max(flops / h["peak_flops_bf16"],
+                   kernel_bytes / h["hbm_bw"])
+    return {
+        "transfer_s": transfer_s,
+        "dispatch_s": dispatch_s,
+        "kernel_s": kernel_s,
+        "predicted_s": transfer_s + dispatch_s + kernel_s,
+    }
 
 
 def roofline_terms(cfg, shape, n_devices: int, hlo_text: str, *,

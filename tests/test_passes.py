@@ -1,0 +1,185 @@
+"""Pass-based planner pipeline (ISSUE 4 tentpole).
+
+Contract under test:
+
+  * ``Pipeline.default(policy)`` reproduces the legacy ``plan()``/
+    ``naive_plan()`` behaviour exactly (the refactor is observationally
+    neutral),
+  * placement policies are registry-pluggable and the grouped policy
+    folds every codelet into one group,
+  * planning the same program twice yields op-for-op identical plans
+    (the compiled-plan fingerprint matches, so cached lowerings stay
+    valid), and stream assignment is stable under group *renumbering*
+    (appearance order, not group id, decides the stream).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AdvancedLoad, DelegateStore, GroupDecl, Program,
+                        Release, Synchronize, execute, naive_plan, plan,
+                        run_host_oracle, transfer_summary)
+from repro.core.ir import PlanOp
+from repro.core.passes import (GroupedPlacement, NaivePlacement,
+                               OptimizedPlacement, Pipeline, PlanDraft,
+                               assign_streams, get_placement,
+                               placement_names, register_placement)
+from repro.optim import plan_step_program
+from repro.polybench import build, build_3mm
+
+
+class TestPipelineParity:
+    """The pipeline is the planner: same plans as the public entry."""
+
+    @pytest.mark.parametrize("policy", ["optimized", "naive"])
+    def test_pipeline_equals_plan_entry(self, policy):
+        p, _ = build_3mm(n=16)
+        via_pipeline = Pipeline.default(policy).run(p)
+        via_entry = plan(p, policy=policy)
+        assert via_pipeline.ops == via_entry.ops
+        assert via_pipeline.groups == via_entry.groups
+
+    def test_legacy_optimize_flag_maps_to_policy(self):
+        p, _ = build_3mm(n=16)
+        assert plan(p, optimize=False).ops == naive_plan(p).ops
+        assert plan(p, optimize=True).ops == plan(p, policy="optimized").ops
+
+    def test_pipeline_runs_on_loop_program(self):
+        p, _ = build("gemm", n=16, iters=3)
+        pl = Pipeline.default("optimized").run(p)
+        out, _ = execute(pl, backend="numpy")
+        oracle = run_host_oracle(p)
+        np.testing.assert_allclose(out["out"], oracle["out"], rtol=1e-5)
+        assert len(pl.pure_device_loops()) == 1
+
+    def test_draft_var_nbytes(self):
+        p, _ = build_3mm(n=8)
+        draft = PlanDraft.from_program(p)
+        nb = draft.var_nbytes()
+        assert nb["A"] == 8 * 8 * 4
+        assert set("ABCDEFG") <= set(nb)
+
+
+class TestPolicyRegistry:
+    def test_builtin_policies_registered(self):
+        assert {"optimized", "naive", "grouped"} <= set(placement_names())
+        assert get_placement("optimized") is OptimizedPlacement
+        assert get_placement("naive") is NaivePlacement
+
+    def test_unknown_policy_rejected(self):
+        p, _ = build_3mm(n=8)
+        with pytest.raises(ValueError):
+            plan(p, policy="hand-tuned")
+
+    def test_register_custom_policy(self):
+        class LatePolicy(NaivePlacement):
+            policy = "late"
+        register_placement("late", LatePolicy)
+        try:
+            p, _ = build_3mm(n=8)
+            pl = plan(p, policy="late")
+            assert pl.meta["policy"] == "late"
+            assert pl.ops == naive_plan(p).ops  # same placement rule
+        finally:
+            from repro.core.passes.placement import _PLACEMENTS
+            _PLACEMENTS.pop("late", None)
+
+    def test_grouped_policy_single_group(self):
+        """Two kernels with disjoint data → two groups under the default
+        union-find, ONE under the grouped policy."""
+        p = Program("two_islands")
+        p.bind("a", np.arange(8, dtype=np.float32))
+        p.bind("b", np.arange(8, dtype=np.float32) + 10.0)
+        p.offload(lambda xp, a: {"x": a * 2.0}, reads=("a",),
+                  writes=("x",), name="k0")
+        p.offload(lambda xp, b: {"y": b + 1.0}, reads=("b",),
+                  writes=("y",), name="k1")
+        p.host(lambda xp, x, y: {"o": x + y}, reads=("x", "y"),
+               writes=("o",), name="c")
+        p.set_outputs("o")
+        default = plan(p)
+        grouped = plan(p, policy="grouped")
+        assert len(default.groups) == 2
+        assert len(grouped.groups) == 1
+        assert len(grouped.directives(GroupDecl)) == 1
+        assert len(grouped.directives(Release)) == 1
+        # same results, same transfer counts as the optimized policy
+        out_d, s_d = execute(default, backend="numpy")
+        out_g, s_g = execute(grouped, backend="numpy")
+        for k in p.outputs:
+            np.testing.assert_array_equal(out_d[k], out_g[k])
+        assert s_d.transfer_counts()["h2d_transfers"] == \
+            s_g.transfer_counts()["h2d_transfers"]
+
+
+class TestDeterminism:
+    """ISSUE 4 satellite: stream ids stable under group renumbering."""
+
+    @pytest.mark.parametrize("builder,kw", [
+        ("3mm", dict(n=16)), ("bicg", dict(n=16)),
+        ("gemm", dict(n=16, iters=3))])
+    def test_two_plans_of_same_program_identical(self, builder, kw):
+        """Planning twice must give op-for-op equal plans — the executor
+        fingerprints compiled lowerings with hash(tuple(plan.ops)), so
+        any drift (e.g. stream ids depending on dict order) silently
+        recompiles every cached jit."""
+        p, _ = build(builder, **kw)
+        pl1, pl2 = plan(p), plan(p)
+        assert pl1.ops == pl2.ops
+        assert hash(tuple(pl1.ops)) == hash(tuple(pl2.ops))
+
+    def test_train_step_plans_identical(self):
+        p = plan_step_program(n_steps=3)
+        assert plan(p).ops == plan(p).ops
+
+    def test_streams_follow_appearance_order_not_group_id(self):
+        """The same directive sequence with renumbered group ids must get
+        the same stream sequence: appearance order decides."""
+        def seq(groups):
+            return [PlanOp("directive", directive=AdvancedLoad(
+                var=f"v{i}", group=g)) for i, g in enumerate(groups)]
+        low = assign_streams(seq([0, 1, 0, 1]), n_streams=2)
+        high = assign_streams(seq([7, 3, 7, 3]), n_streams=2)  # renumbered
+        assert [op.directive.stream for op in low] == \
+            [op.directive.stream for op in high] == [1, 2, 1, 2]
+
+    def test_stream_count_parameter(self):
+        ops = [PlanOp("directive", directive=DelegateStore(var=f"v{g}",
+                                                           group=g))
+               for g in (0, 1, 2, 3)]
+        one = assign_streams(ops, n_streams=1)
+        assert {op.directive.stream for op in one} == {1}
+        four = assign_streams(ops, n_streams=4)
+        assert [op.directive.stream for op in four] == [1, 2, 3, 4]
+
+    def test_sync_shares_its_groups_stream(self):
+        p, _ = build("bicg", n=16)
+        pl = plan(p, n_streams=4)
+        by_group = {}
+        for d in pl.directives():
+            if isinstance(d, (AdvancedLoad, DelegateStore, Synchronize)):
+                by_group.setdefault(d.group, set()).add(d.stream)
+        for streams in by_group.values():
+            assert len(streams) == 1
+
+
+class TestPassIndependence:
+    def test_noupdate_and_group_passes_idempotent(self):
+        from repro.core.passes import (GroupFinalizePass, LinearizePass,
+                                       NoupdatePass)
+        p, _ = build_3mm(n=8)
+        draft = PlanDraft.from_program(p)
+        pipeline = Pipeline.default("optimized")
+        for pas in pipeline.passes:
+            pas.run(draft)
+        before = list(draft.ops)
+        for pas in (LinearizePass(), NoupdatePass(), GroupFinalizePass()):
+            pas.run(draft)
+        assert draft.ops == before
+
+    def test_transfer_summary_unchanged_by_refactor(self):
+        """The seed's worked example still produces the paper's Table 2
+        schedule: 4 loads / 1 store / noupdate on E and F."""
+        p, _ = build_3mm(n=32)
+        s = transfer_summary(plan(p))
+        assert s["loads"] == 4 and s["stores"] == 1
+        assert s["noupdate_args"] == 2

@@ -93,7 +93,7 @@ def _nbytes(x) -> int:
 
 def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
             *, check: bool = True, mode: str = "interpreted",
-            backend: Any = None, fuse_loops: bool = True
+            backend: Any = None, fuse_loops: Optional[bool] = None
             ) -> Tuple[Dict[str, np.ndarray], ExecStats]:
     """Run the plan; return (program outputs on host, stats).
 
@@ -102,7 +102,11 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
     or None for the default JAX device backend.  ``fuse_loops`` (compiled
     mode only) rolls eligible pure-device loops into a single backend
     dispatch (``lax.fori_loop``); disable it to benchmark the
-    per-iteration segment path.
+    per-iteration segment path.  When left None it follows the plan:
+    a tuned winner carries its chosen flag in ``meta["fuse_loops"]``
+    (default True), so executing a ``policy="auto"`` plan directly runs
+    the variant the tuner measured (donation still needs the matching
+    backend — use ``winner_exec_kwargs``).
 
     One-time plan-lowering cost is reported as ``stats.compile_time`` and
     excluded from ``stats.wall_time``, so first-call and steady-state runs
@@ -110,6 +114,8 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
     """
     if mode not in ("interpreted", "compiled"):
         raise ValueError(f"unknown execution mode {mode!r}")
+    if fuse_loops is None:
+        fuse_loops = bool(p.meta.get("fuse_loops", True))
     be = get_backend(backend)
     program = p.program
     env: Dict[str, _Slot] = {}

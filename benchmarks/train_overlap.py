@@ -131,6 +131,13 @@ def run_plan_executor(n_steps: int = 64, reps: int = 3):
         1 for c in tuned.meta["tuning"]["candidates"] if c["valid"])
     chosen = tuned.predicted_cost()
     out["auto_predicted_ms"] = chosen["predicted_s"] * 1e3
+    # persistent-cache + calibration outcome (ISSUE 5): a repeated run
+    # answers from the tuning cache with zero measurements
+    cache_info = tuned.tuning_cache_info()
+    out["auto_cache_hit"] = cache_info["hit"]
+    out["auto_measurements"] = cache_info["measurements"]
+    cal = tuned.tuning_calibration() or {}
+    out["auto_calibration_accepted"] = bool(cal.get("accepted"))
     return out
 
 

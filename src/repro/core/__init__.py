@@ -28,6 +28,9 @@ from .passes import (Pass, Pipeline, PlanDraft, get_placement,
                      placement_names, register_placement)
 from .planner import naive_plan, plan, transfer_summary
 from .residency import DeviceResidency, ResidencyStats
+from .tunecache import (COST_MODEL_VERSION, TuneCache, backend_fingerprint,
+                        default_cache, program_fingerprint,
+                        tuning_fingerprint)
 from .tuner import PlanConfig, predict_cost, tune, winner_exec_kwargs
 
 __all__ = [
@@ -43,4 +46,6 @@ __all__ = [
     "Pass", "Pipeline", "PlanDraft",
     "register_placement", "get_placement", "placement_names",
     "PlanConfig", "predict_cost", "tune", "winner_exec_kwargs",
+    "TuneCache", "COST_MODEL_VERSION", "default_cache",
+    "program_fingerprint", "backend_fingerprint", "tuning_fingerprint",
 ]

@@ -78,10 +78,22 @@ class Backend:
 
     name: str = "abstract"
     n_streams: int = 2   # logical transfer streams (double-buffered)
+    supports_donation: bool = False   # can ``donate=True`` change execution?
 
     def __init__(self) -> None:
         self._pending: Dict[int, List[Event]] = {}
         self.loop_dispatches = 0   # fused whole-loop launches (launch_loop)
+
+    def variant(self, *, n_streams: Optional[int] = None,
+                donate: Optional[bool] = None) -> "Backend":
+        """A backend identical to this one except for the given knobs —
+        the tuner uses it to measure each candidate on a PHYSICALLY
+        matching backend (a streams-3 plan on a 3-queue backend, a
+        donate candidate on a donating one) instead of folding every
+        config onto the caller's instance.  Backends without the knob
+        return themselves; implementations must memoize twins so jit /
+        lowering caches are shared across tuning calls."""
+        return self
 
     @property
     def xp(self):
@@ -261,6 +273,7 @@ class JaxDeviceBackend(Backend):
     """Default JAX device space, async transfers on logical streams."""
 
     name = "jax"
+    supports_donation = True
 
     def __init__(self, device=None, *, n_streams: int = 2,
                  donate: bool = False):
@@ -270,6 +283,21 @@ class JaxDeviceBackend(Backend):
         self._device = device if device is not None else jax.devices()[0]
         self.n_streams = n_streams
         self.donate = donate
+        # (n_streams, donate) -> twin; shared by every twin of this
+        # device so variant-of-variant returns the original instance
+        self._variant_pool: Dict[Tuple[int, bool], "JaxDeviceBackend"] = {
+            (n_streams, donate): self}
+
+    def variant(self, *, n_streams: Optional[int] = None,
+                donate: Optional[bool] = None) -> "JaxDeviceBackend":
+        ns = self.n_streams if n_streams is None else max(1, int(n_streams))
+        dn = self.donate if donate is None else bool(donate)
+        twin = self._variant_pool.get((ns, dn))
+        if twin is None:
+            twin = type(self)(device=self._device, n_streams=ns, donate=dn)
+            twin._variant_pool = self._variant_pool
+            self._variant_pool[(ns, dn)] = twin
+        return twin
 
     @property
     def xp(self):

@@ -253,10 +253,20 @@ class Plan:
     #   "var_nbytes"         — concrete byte size of every program var
     #       (the cost model's raw material)
     # and by the plan-space tuner (repro.core.tuner):
-    #   "tuning"             — {"chosen", "backend", "hw", "candidates"}:
-    #       the ranked candidate table, each entry carrying the cost
-    #       breakdown (transfer_s/dispatch_s/kernel_s/predicted_s) and
-    #       measured_s when the candidate was run
+    #   "tuning"             — {"chosen", "backend", "hw", "calibration",
+    #       "candidates"}: the ranked candidate table, each entry
+    #       carrying the cost breakdown (transfer_s/dispatch_s/kernel_s/
+    #       predicted_s), measured_s when its execution class was run,
+    #       calibrated_s when a fit was made, and alias_of naming the
+    #       class survivor for dominance-pruned (execution-identical)
+    #       configs.  "hw" is the pricing constants actually used
+    #       (calibrated when a fit was cached); "calibration" records
+    #       the fit: {"n_rows", "fitted", "accepted",
+    #       "rank_corr_before", "rank_corr_after"}
+    #   "tuning_cache"       — {"hit", "measurements", "path",
+    #       "fingerprint"}: whether the persistent cache
+    #       (repro.core.tunecache) answered, and how many execution
+    #       classes were measured this call (0 on a hit)
     #   "fuse_loops"/"donate" — how the winning plan wants executing
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -288,3 +298,14 @@ class Plan:
         (empty if this plan was not produced by ``policy="auto"``)."""
         tuning = self.meta.get("tuning")
         return list(tuning["candidates"]) if tuning else []
+
+    def tuning_calibration(self) -> Optional[Dict[str, Any]]:
+        """The measured-calibration record from the tuning run (None if
+        not tuned, not measured, or calibration was disabled)."""
+        tuning = self.meta.get("tuning")
+        return tuning.get("calibration") if tuning else None
+
+    def tuning_cache_info(self) -> Optional[Dict[str, Any]]:
+        """Cache outcome of the tuning run: {"hit", "measurements",
+        "path", "fingerprint"} (None if this plan was not tuned)."""
+        return self.meta.get("tuning_cache")

@@ -1,0 +1,242 @@
+"""Persistent plan-space tuning cache (ISSUE 5).
+
+The PR-3 explorer re-measures the full candidate grid on every
+``plan(p, policy="auto")`` call.  The sequel paper (arXiv:1506.02833)
+makes the point that the exploration must be cheap and *repeatable* to
+be usable: this module keys each tuning result on a content fingerprint
+of everything the result depends on —
+
+    program ops        block bodies (bytecode), reads/writes, loop nest,
+                       input shapes/dtypes, declared outputs
+    backend identity   class, registered name, stream count, donation
+                       flag, device
+    candidate grid     the exact config list plus the measurement
+                       protocol (top_k, reps)
+    cost model         ``COST_MODEL_VERSION`` + the default hardware
+                       constants the predictions were priced with
+
+— so a repeated ``policy="auto"`` call returns the cached winner (and
+the byte-identical ranked table) without re-measuring, while ANY change
+to the program, the backend, the grid, or the cost model misses.
+
+Entries are one JSON file per (program name, backend, grid+protocol)
+slot — distinct grids/protocols of the same program coexist instead of
+evicting each other — while the FULL fingerprint is stored inside the
+entry and checked on lookup, so a genuinely stale entry (program edited
+in place, cost-model version bumped) is evicted rather than reused.
+``tune(refresh=True)`` bypasses lookup and overwrites.
+
+The cache also persists the *measured calibration* of the cost model
+(fitted ``pcie_bw`` / ``launch_overhead_s`` / ``sync_overhead_s``, see
+``repro.roofline.analysis.fit_offload_constants``) per backend, keyed
+on the cost-model version, so constants fitted while tuning one program
+price the next one.
+
+Location: the ``REPRO_TUNE_CACHE`` env var (empty/"off"/"0" disables
+caching), else ``$XDG_CACHE_HOME/repro/tunecache``.  This module is
+deliberately stdlib-only so CI can probe ``COST_MODEL_VERSION`` without
+importing the JAX stack.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import re
+import tempfile
+from typing import Any, Dict, Optional, Sequence
+
+__all__ = [
+    "COST_MODEL_VERSION", "TuneCache", "default_cache",
+    "program_fingerprint", "backend_fingerprint", "grid_fingerprint",
+    "tuning_fingerprint", "calibration_fingerprint",
+]
+
+# Bump whenever predict_cost / offload_cost_terms semantics change: every
+# cached table and every fitted calibration is invalidated by the bump.
+# v1 was the PR-3 tuner (no cache); v2 adds dominance pruning + hw= pricing.
+COST_MODEL_VERSION = 2
+
+_ENV_VAR = "REPRO_TUNE_CACHE"
+_DISABLED = ("", "0", "off", "none")
+
+
+def _sha(obj: Any) -> str:
+    blob = json.dumps(obj, sort_keys=True, default=repr).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def _cell_key(value: Any) -> Any:
+    """Key for one closure-cell value.  repr alone is NOT enough for
+    arrays — numpy truncates > 1000 elements shapelessly, so two
+    different-sized captured weight arrays would repr identically and
+    alias a stale cache entry; shape/dtype are keyed explicitly."""
+    shape = getattr(value, "shape", None)
+    if shape is not None:
+        return ["array", list(shape),
+                str(getattr(value, "dtype", "")), repr(value)]
+    return repr(value)
+
+
+def _code_key(fn) -> Any:
+    """Content key for a block body: bytecode + consts + names, so an
+    edited kernel invalidates while re-building the identical lambda
+    does not.  Closure cell values are included (a captured scalar or
+    array changing the computation must change the key)."""
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return repr(fn)
+    cells = tuple(_cell_key(getattr(c, "cell_contents", None))
+                  for c in (fn.__closure__ or ()))
+    return [code.co_code.hex(), repr(code.co_consts), code.co_names,
+            code.co_varnames, code.co_argcount, code.co_freevars, cells]
+
+
+def program_fingerprint(program) -> str:
+    """Content hash of the tuning-relevant program structure.  Input
+    *values* are excluded on purpose — timings depend on shapes and
+    dtypes, not on the numbers in the arrays."""
+    obj = {
+        "name": program.name,
+        "blocks": [[b.idx, b.kind.value, b.name, list(b.reads),
+                    list(b.writes), list(b.loop_path), _code_key(b.fn)]
+                   for b in program.blocks],
+        "loops": [[lid, info.n_iters, list(info.parent_path)]
+                  for lid, info in sorted(program.loops.items())],
+        "inputs": [[k, list(getattr(v, "shape", ())),
+                    str(getattr(v, "dtype", type(v).__name__))]
+                   for k, v in sorted(program.inputs.items())],
+        "outputs": list(program.outputs),
+    }
+    return _sha(obj)
+
+
+def backend_fingerprint(backend) -> str:
+    """Identity string for the measuring backend: two backends with the
+    same fingerprint must time a plan the same way."""
+    return (f"{type(backend).__name__}:{backend.name}"
+            f":streams{backend.n_streams}"
+            f":donate{getattr(backend, 'donate', False)}"
+            f":{getattr(backend, '_device', None)}")
+
+
+def grid_fingerprint(configs: Sequence, protocol: Dict[str, Any]) -> str:
+    """Hash of the candidate grid + measurement protocol: part of the
+    SLOT key (not just the fingerprint), so e.g. a ``top_k`` sweep and
+    the default grid of the same program keep separate entries instead
+    of evicting each other on every alternation."""
+    return _sha({"grid": [c.as_dict() for c in configs],
+                 "protocol": protocol})
+
+
+def tuning_fingerprint(program, backend, configs: Sequence,
+                       protocol: Dict[str, Any],
+                       hw: Dict[str, float]) -> str:
+    """The full cache key: see module docstring.  ``hw`` must be the
+    DEFAULT pricing constants (never the calibrated ones — calibration
+    drift must not evict measured tables, see tune())."""
+    return _sha({
+        "cost_model_version": COST_MODEL_VERSION,
+        "program": program_fingerprint(program),
+        "backend": backend_fingerprint(backend),
+        "grid": [c.as_dict() for c in configs],
+        "protocol": protocol,
+        "hw": {k: hw[k] for k in sorted(hw)},
+    })
+
+
+def calibration_fingerprint(hw: Dict[str, float]) -> str:
+    """Fitted constants are valid for one (cost-model version, default
+    constants) pair; either changing discards them."""
+    return _sha({"cost_model_version": COST_MODEL_VERSION,
+                 "hw": {k: hw[k] for k in sorted(hw)}})
+
+
+class TuneCache:
+    """One JSON file per slot under ``path``; lookups validate the
+    stored fingerprint and evict on mismatch (stale-entry invalidation).
+    Writes are atomic (tempfile + rename)."""
+
+    def __init__(self, path: Optional[Any] = None):
+        if path is None:
+            env = os.environ.get(_ENV_VAR)
+            # a disable sentinel is not a directory name: a direct
+            # TuneCache() under REPRO_TUNE_CACHE=off must not create a
+            # literal ./off — fall through to the XDG default (callers
+            # wanting the sentinel honored use default_cache())
+            if env and env.strip().lower() not in _DISABLED:
+                path = env
+            else:
+                xdg = os.environ.get("XDG_CACHE_HOME",
+                                     os.path.expanduser("~/.cache"))
+                path = os.path.join(xdg, "repro", "tunecache")
+        self.path = pathlib.Path(path)
+
+    # -- internals ----------------------------------------------------------
+    def _slot_path(self, slot: str) -> pathlib.Path:
+        safe = re.sub(r"[^A-Za-z0-9._-]+", "_", slot)[:48]
+        return self.path / f"{safe}-{_sha(slot)[:16]}.json"
+
+    # -- tuning entries -----------------------------------------------------
+    def lookup(self, slot: str, fingerprint: str) -> Optional[Dict]:
+        """The payload stored for ``slot`` iff its fingerprint matches;
+        a stale entry is deleted and reported as a miss."""
+        fp_path = self._slot_path(slot)
+        try:
+            entry = json.loads(fp_path.read_text())
+        except (OSError, ValueError):
+            return None
+        if entry.get("fingerprint") != fingerprint:
+            try:
+                fp_path.unlink()
+            except OSError:
+                pass
+            return None
+        return entry.get("payload")
+
+    def store(self, slot: str, fingerprint: str, payload: Dict) -> None:
+        self.path.mkdir(parents=True, exist_ok=True)
+        entry = {"slot": slot, "fingerprint": fingerprint,
+                 "cost_model_version": COST_MODEL_VERSION,
+                 "payload": payload}
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(entry, f, indent=1, sort_keys=True, default=float)
+            os.replace(tmp, self._slot_path(slot))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- fitted calibration constants ---------------------------------------
+    def load_calibration(self, backend_key: str,
+                         hw: Dict[str, float]) -> Optional[Dict[str, float]]:
+        payload = self.lookup(f"calibration--{backend_key}",
+                              calibration_fingerprint(hw))
+        return payload.get("fitted") if payload else None
+
+    def store_calibration(self, backend_key: str, hw: Dict[str, float],
+                          fitted: Dict[str, float]) -> None:
+        self.store(f"calibration--{backend_key}",
+                   calibration_fingerprint(hw), {"fitted": fitted})
+
+    def clear(self) -> None:
+        if self.path.is_dir():
+            for f in self.path.glob("*.json"):
+                try:
+                    f.unlink()
+                except OSError:
+                    pass
+
+
+def default_cache() -> Optional[TuneCache]:
+    """Process default: honors ``REPRO_TUNE_CACHE`` (set a directory to
+    relocate, empty/"off" to disable)."""
+    env = os.environ.get(_ENV_VAR)
+    if env is not None and env.strip().lower() in _DISABLED:
+        return None
+    return TuneCache()

@@ -13,9 +13,34 @@ paper explores —
 
 — rank them with a static cost model that reuses the roofline machinery
 (``repro.roofline.analysis``: per-block HLO dot-FLOPs, PCIe/HBM
-bandwidths, launch overhead × dispatch count), optionally refine the
-top-k by measured wall time, and return the winner with the full ranked
-table in ``plan.meta["tuning"]``.
+bandwidths, launch overhead × dispatch count), measure the distinct
+candidates, and return the winner with the full ranked table in
+``plan.meta["tuning"]``.
+
+ISSUE 5 additions on top of the PR-3 explorer:
+
+*Dominance pruning* — configs that are execution-identical (a streams
+axis with < 2 groups, donate on a backend without donation, fuse on a
+plan with no fusable loops) are merged into one *execution class*: the
+class survivor is measured ONCE and the merged configs inherit its
+numbers, carrying ``alias_of`` so the table still enumerates the full
+axis grid the paper explores.  Candidates that ARE measured run on a
+physically matching backend (``Backend.variant``: a streams-3 config on
+a 3-queue backend, donate on a donating twin).
+
+*Persistent cache* — measured results are keyed on a content
+fingerprint of (program ops, backend identity, candidate grid + protocol,
+cost-model version) in ``repro.core.tunecache``; a repeated
+``policy="auto"`` call returns the cached winner with zero measurements
+and a byte-identical table.  ``refresh=True`` re-measures.
+
+*Measured calibration* — after measuring, ``pcie_bw`` /
+``launch_overhead_s`` / ``sync_overhead_s`` are re-fitted by least
+squares from the (predicted-terms, measured-time) table
+(``fit_offload_constants``); the fit is kept only when it does not lower
+the predicted-vs-measured rank correlation (both correlations are
+recorded in ``meta["tuning"]["calibration"]``), persisted per backend in
+the cache, and used to price subsequent programs.
 
 Entry point: ``tune(program, backend=...)``, or equivalently
 ``plan(program, policy="auto", backend=...)``.
@@ -30,12 +55,16 @@ import dataclasses
 import itertools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from ..roofline.analysis import HW, dot_flops, offload_cost_terms, parse_hlo
+from ..roofline.analysis import (HW, dot_flops, fit_offload_constants,
+                                 offload_cost_terms, parse_hlo,
+                                 rank_correlation)
 from .analysis import ProgramAnalysis, analyze
 from .backend import Backend, JaxDeviceBackend, get_backend
 from .ir import (AdvancedLoad, BlockKind, DelegateStore, Plan, Program,
                  Synchronize)
 from .passes import Pipeline
+from .tunecache import (TuneCache, backend_fingerprint, default_cache,
+                        grid_fingerprint, tuning_fingerprint)
 
 __all__ = ["PlanConfig", "enumerate_configs", "predict_cost", "tune",
            "winner_exec_kwargs"]
@@ -61,6 +90,16 @@ class PlanConfig:
 
 DEFAULT_POLICIES: Tuple[str, ...] = ("naive", "optimized", "grouped")
 DEFAULT_STREAMS: Tuple[int, ...] = (1, 2, 3, 4)
+
+# the hw constants snapshotted into plan.meta["tuning"]["hw"]
+_HW_KEYS = ("pcie_bw", "hbm_bw", "peak_flops_bf16",
+            "launch_overhead_s", "sync_overhead_s")
+
+# every field predict_cost() contributes to a candidate record (what an
+# alias copies from its execution-class survivor)
+_COST_FIELDS = ("h2d_bytes", "d2h_bytes", "loads", "stores", "syncs",
+                "kernel_launches", "dispatches", "flops", "kernel_bytes",
+                "transfer_s", "dispatch_s", "kernel_s", "predicted_s")
 
 
 def enumerate_configs(policies: Sequence[str] = DEFAULT_POLICIES,
@@ -106,8 +145,8 @@ def _block_flops(program: Program,
 
 
 def predict_cost(pl: Plan, cfg: PlanConfig,
-                 block_flops: Optional[Dict[int, float]] = None
-                 ) -> Dict[str, Any]:
+                 block_flops: Optional[Dict[int, float]] = None,
+                 hw: Optional[Dict[str, float]] = None) -> Dict[str, Any]:
     """Walk the plan with loop-trip multipliers and price it:
 
     * transfer bytes  — Σ nbytes(var) × trip multiplier per load/store,
@@ -118,8 +157,10 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
     * kernel terms    — logical block launches × per-block HLO FLOPs and
       touched bytes (plan-invariant; keeps predictions in real units).
 
-    Returns the counters plus ``offload_cost_terms`` (transfer_s /
-    dispatch_s / kernel_s / predicted_s).
+    ``hw`` overrides the pricing constants (the tuner passes the
+    calibrated set when one is cached for the backend).  Returns the
+    counters plus ``offload_cost_terms`` (transfer_s / dispatch_s /
+    kernel_s / predicted_s).
     """
     from .compile import fusable_loops
     program = pl.program
@@ -184,7 +225,7 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
                 syncs += m
 
     terms = offload_cost_terms(h2d_bytes, d2h_bytes, dispatches, syncs,
-                               flops, kernel_bytes)
+                               flops, kernel_bytes, hw=hw)
     return {
         "h2d_bytes": int(h2d_bytes), "d2h_bytes": int(d2h_bytes),
         "loads": int(loads), "stores": int(stores), "syncs": int(syncs),
@@ -199,19 +240,11 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
 # --------------------------------------------------------------------------
 
 def _donation_variant(be: Backend, donate: bool) -> Backend:
-    """``be`` with donation switched to ``donate`` (a cached twin when
+    """``be`` with donation switched to ``donate`` (a memoized twin when
     they differ, in EITHER direction — a donate=True backend passed by
     the caller must not leak donation into nodonate candidates).
     Backends without a donation concept measure both as themselves."""
-    if isinstance(be, JaxDeviceBackend) and be.donate != donate:
-        attr = "_donate_twin" if donate else "_nodonate_twin"
-        twin = getattr(be, attr, None)
-        if twin is None:
-            twin = type(be)(device=be._device, n_streams=be.n_streams,
-                            donate=donate)
-            setattr(be, attr, twin)
-        return twin
-    return be
+    return be.variant(donate=donate)
 
 
 def _measurable(program: Program) -> bool:
@@ -221,8 +254,12 @@ def _measurable(program: Program) -> bool:
 
 def _measure(pl: Plan, cfg: PlanConfig, be: Backend, reps: int) -> float:
     from .executor import execute
+    # measure on a physically matching backend: cfg.n_streams real
+    # queues (streams 3/4 must not fold onto a 2-queue instance) and
+    # the candidate's donation flag
     kw = dict(mode="compiled", fuse_loops=cfg.fuse_loops,
-              backend=_donation_variant(be, cfg.donate))
+              backend=be.variant(n_streams=cfg.n_streams,
+                                 donate=cfg.donate))
     execute(pl, **kw)                       # warm jits + plan lowering
     best = float("inf")
     for _ in range(max(1, reps)):
@@ -245,8 +282,67 @@ def winner_exec_kwargs(pl: Plan, backend: Any = None) -> Dict[str, Any]:
 
 
 # --------------------------------------------------------------------------
+# Calibration.
+# --------------------------------------------------------------------------
+
+def _calibrate(rows: List[Dict[str, Any]],
+               pricing_hw: Dict[str, float]) -> Dict[str, Any]:
+    """Fit the offload constants from the measured class survivors and
+    judge the fit by predicted-vs-measured rank correlation.  The fit is
+    ``accepted`` only when it does not lower the correlation on the
+    observed table — a declined calibration is still recorded (both
+    correlations), it just isn't persisted or used for pricing."""
+    before = rank_correlation([r["predicted_s"] for r in rows],
+                              [r["measured_s"] for r in rows])
+    record = {"n_rows": len(rows), "fitted": None, "accepted": False,
+              "rank_corr_before": before, "rank_corr_after": None}
+    fitted = fit_offload_constants(rows, hw=pricing_hw)
+    if fitted is None:
+        return record
+    hw2 = dict(pricing_hw)
+    hw2.update(fitted)
+    for r in rows:
+        r["calibrated_s"] = offload_cost_terms(
+            r["h2d_bytes"], r["d2h_bytes"], r["dispatches"], r["syncs"],
+            r["flops"], r["kernel_bytes"], hw=hw2)["predicted_s"]
+    after = rank_correlation([r["calibrated_s"] for r in rows],
+                             [r["measured_s"] for r in rows])
+    record.update(fitted=fitted, rank_corr_after=after,
+                  accepted=after >= before)
+    return record
+
+
+# --------------------------------------------------------------------------
 # The explorer.
 # --------------------------------------------------------------------------
+
+def _resolve_cache(cache: Any) -> Optional[TuneCache]:
+    if cache is None:
+        return default_cache()
+    if cache is False:
+        return None
+    return cache
+
+
+def _cached_plan(program: Program, an: ProgramAnalysis, tuning: Dict,
+                 fp: str, tc: TuneCache) -> Plan:
+    """Rebuild the winning plan from a cache hit: the pass pipeline is
+    deterministic, so re-running it for the chosen config reproduces the
+    measured winner's ops exactly; the serialized table is attached
+    verbatim (identical to the fresh run that stored it)."""
+    chosen = next(c for c in tuning["candidates"]
+                  if c["label"] == tuning["chosen"])
+    cfg = PlanConfig(**chosen["config"])
+    pl = Pipeline.default(cfg.policy, n_streams=cfg.n_streams
+                          ).run(program, analysis=an)
+    pl.meta["tuning"] = tuning
+    pl.meta["fuse_loops"] = cfg.fuse_loops
+    pl.meta["donate"] = cfg.donate
+    pl.meta["optimize"] = cfg.policy != "naive"
+    pl.meta["tuning_cache"] = {"hit": True, "measurements": 0,
+                               "path": str(tc.path), "fingerprint": fp}
+    return pl
+
 
 def tune(program: Program, *, backend: Any = None,
          analysis: Optional[ProgramAnalysis] = None,
@@ -256,29 +352,47 @@ def tune(program: Program, *, backend: Any = None,
          donate: Sequence[bool] = (False, True),
          configs: Optional[Sequence[PlanConfig]] = None,
          measure: bool = True, top_k: Optional[int] = None,
-         reps: int = 2) -> Plan:
+         reps: int = 2, cache: Any = None, refresh: bool = False,
+         calibrate: bool = True, use_calibration: bool = True) -> Plan:
     """Explore the plan space; return the winning ``Plan``.
 
-    Candidates with identical ops and execution flags are deduplicated
-    (the merged config labels land in the survivor's ``aliases``); every
-    unique candidate is priced by ``predict_cost`` and — when ``measure``
-    and the program's inputs are concrete — run ``reps`` times on
-    ``backend`` (all of them, or only the predicted top-``top_k``).
-    Candidates are CONFIG-distinct, not always execution-distinct: fuse
-    on a loop-free plan, donate on a non-donating backend, or a streams
-    axis above the backend's physical queue count all measure the same
-    execution under different labels, and noise picks among them — by
-    design, so the table enumerates the full axis grid the paper
-    explores (see ROADMAP for the planned dominance pruning).  The
-    winner is the best *measured* candidate (predicted order breaks
-    ties / decides when measurement is off), returned with:
+    Candidates are grouped into *execution classes* (identical ops +
+    effective fusion + effective donation): each class is priced and
+    measured once through its first-enumerated survivor, and the merged
+    configs appear in the table with ``alias_of`` pointing at it — the
+    table still enumerates the full config grid the paper explores,
+    measurement cost scales with the DISTINCT executions.  Measured
+    classes run ``reps`` times compiled on a physically matching
+    ``backend.variant`` (all of them, or only the predicted
+    top-``top_k`` classes).  The winner is the best *measured* candidate
+    (predicted order breaks ties / decides when measurement is off).
 
-        plan.meta["tuning"]   {"chosen", "backend", "hw", "candidates"}
-                              — candidates ranked by predicted cost,
-                              each with predicted AND measured seconds
+    ``cache`` is a ``TuneCache`` (None → the ``REPRO_TUNE_CACHE``
+    default, False → disabled): when the content fingerprint of
+    (program, backend, grid, protocol, cost-model version) hits, the
+    stored winner + table are returned with ZERO measurements;
+    ``refresh=True`` re-measures and overwrites.  ``measure=False``
+    bypasses the cache entirely (predictions are cheap and a cached
+    measured table would not be the requested artifact).
+
+    ``calibrate``/``use_calibration`` control the measured calibration:
+    fitted ``pcie_bw``/``launch_overhead_s``/``sync_overhead_s`` are
+    stored per backend and used to price subsequent tuning calls (see
+    ``meta["tuning"]["calibration"]`` for the fit and the
+    before/after rank correlations).  Returned meta:
+
+        plan.meta["tuning"]   {"chosen", "backend", "hw", "calibration",
+                              "candidates"} — candidates ranked by
+                              predicted cost, each with predicted AND
+                              measured seconds
+        plan.meta["tuning_cache"]
+                              {"hit", "measurements", "path",
+                              "fingerprint"} — cache outcome + how many
+                              configs were actually measured
         plan.meta["fuse_loops"] / ["donate"]
                               — how the winner wants to be executed
     """
+    from .compile import fusable_loops
     an = analysis or analyze(program)
     be = get_backend(backend)
     cfg_list = list(configs) if configs is not None else enumerate_configs(
@@ -286,15 +400,43 @@ def tune(program: Program, *, backend: Any = None,
     if not cfg_list:
         raise ValueError("tune() needs at least one candidate config")
 
+    # -- cache lookup (measured tables only) --------------------------------
+    tc = _resolve_cache(cache) if measure else None
+    fp = slot = None
+    be_key = backend_fingerprint(be)
+    if tc is not None:
+        protocol = {"measure": True, "top_k": top_k, "reps": int(reps),
+                    "calibrate": bool(calibrate),
+                    "use_calibration": bool(use_calibration)}
+        fp = tuning_fingerprint(program, be, cfg_list, protocol, HW)
+        # the grid/protocol is part of the SLOT (coexisting entries),
+        # not just the fingerprint (which would evict-thrash between
+        # alternating protocol variants of the same program)
+        slot = (f"{program.name}--{be_key}"
+                f"--{grid_fingerprint(cfg_list, protocol)[:16]}")
+        if not refresh:
+            payload = tc.lookup(slot, fp)
+            if payload is not None:
+                return _cached_plan(program, an, payload["tuning"], fp, tc)
+
+    # -- pricing constants: calibrated when a fit is cached -----------------
+    pricing_hw = dict(HW)
+    if use_calibration and tc is not None:
+        fitted = tc.load_calibration(be_key, HW)
+        if fitted:
+            pricing_hw.update(fitted)
+
+    # -- enumerate + dominance-prune into execution classes -----------------
     flops_cache: Optional[Dict[int, float]] = None
     records: List[Dict[str, Any]] = []
     plans: Dict[str, Plan] = {}
-    seen: Dict[Tuple, Dict[str, Any]] = {}
+    classes: Dict[Tuple, Dict[str, Any]] = {}
 
     for cfg in cfg_list:
         base = {"label": cfg.label, "config": cfg.as_dict(),
-                "aliases": [], "valid": True, "error": None,
-                "measured_s": None, "rank": None}
+                "aliases": [], "alias_of": None, "valid": True,
+                "error": None, "measured_s": None, "calibrated_s": None,
+                "rank": None}
         try:
             pl = Pipeline.default(cfg.policy, n_streams=cfg.n_streams
                                   ).run(program, analysis=an)
@@ -302,18 +444,26 @@ def tune(program: Program, *, backend: Any = None,
             base.update(valid=False, error=str(e))
             records.append(base)
             continue
-        # the ops tuple itself (frozen dataclasses) keys the dedupe —
-        # exact, unlike its hash, which could collide two distinct plans
-        key = (tuple(pl.ops), cfg.fuse_loops, cfg.donate)
-        if key in seen:
-            seen[key]["aliases"].append(cfg.label)
-            continue
-        if flops_cache is None:
-            flops_cache = _block_flops(program, an.shapes)
-        base.update(predict_cost(pl, cfg, flops_cache))
-        seen[key] = base
+        # execution class: the ops tuple itself (frozen dataclasses —
+        # exact, unlike its hash) + the flags as the EXECUTOR sees them.
+        # fuse without fusable loops, or donate on a backend without
+        # donation, cannot change execution: such configs merge here
+        # instead of being measured separately (dominance pruning).
+        eff_fuse = cfg.fuse_loops and bool(fusable_loops(pl))
+        eff_donate = cfg.donate and be.supports_donation
+        key = (tuple(pl.ops), eff_fuse, eff_donate)
+        survivor = classes.get(key)
+        if survivor is None:
+            if flops_cache is None:
+                flops_cache = _block_flops(program, an.shapes)
+            base.update(predict_cost(pl, cfg, flops_cache, hw=pricing_hw))
+            classes[key] = base
+            plans[cfg.label] = pl
+        else:
+            survivor["aliases"].append(cfg.label)
+            base["alias_of"] = survivor["label"]
+            base.update({k: survivor[k] for k in _COST_FIELDS})
         records.append(base)
-        plans[cfg.label] = pl
 
     valid = [r for r in records if r["valid"]]
     if not valid:
@@ -324,25 +474,57 @@ def tune(program: Program, *, backend: Any = None,
     for i, r in enumerate(valid):
         r["rank"] = i + 1
 
+    # -- measure one survivor per class -------------------------------------
+    n_measured = 0
     if measure and _measurable(program):
-        to_measure = valid if top_k is None else valid[:max(1, top_k)]
+        survivors = [r for r in valid if r["alias_of"] is None]
+        to_measure = (survivors if top_k is None
+                      else survivors[:max(1, top_k)])
         for r in to_measure:
             cfg = PlanConfig(**r["config"])
             r["measured_s"] = _measure(plans[r["label"]], cfg, be, reps)
+            n_measured += 1
+
+    # -- calibration (on the measured survivors, before alias fan-out) ------
+    calibration = None
+    measured_survivors = [r for r in valid if r["alias_of"] is None
+                          and r["measured_s"] is not None]
+    if calibrate and measured_survivors:
+        calibration = _calibrate(measured_survivors, pricing_hw)
+        if calibration["accepted"] and calibration["fitted"] and tc:
+            tc.store_calibration(be_key, HW, calibration["fitted"])
+
+    # merged configs inherit their survivor's measurements
+    by_label = {r["label"]: r for r in valid}
+    for r in valid:
+        if r["alias_of"] is not None:
+            survivor = by_label[r["alias_of"]]
+            r["measured_s"] = survivor["measured_s"]
+            r["calibrated_s"] = survivor["calibrated_s"]
 
     measured = [r for r in valid if r["measured_s"] is not None]
-    chosen = (min(measured, key=lambda r: r["measured_s"]) if measured
-              else valid[0])
+    # ties (merged classes share a value) resolve to the best rank,
+    # which is always a class survivor
+    chosen = (min(measured, key=lambda r: (r["measured_s"], r["rank"]))
+              if measured else valid[0])
 
-    best = plans[chosen["label"]]
+    best = plans[chosen["alias_of"] or chosen["label"]]
     best.meta["tuning"] = {
         "chosen": chosen["label"],
         "backend": be.name,
-        "hw": {k: HW[k] for k in ("pcie_bw", "hbm_bw", "peak_flops_bf16",
-                                  "launch_overhead_s", "sync_overhead_s")},
+        "hw": {k: pricing_hw[k] for k in _HW_KEYS},
+        "calibration": calibration,
         "candidates": valid + [r for r in records if not r["valid"]],
     }
     best.meta["fuse_loops"] = chosen["config"]["fuse_loops"]
     best.meta["donate"] = chosen["config"]["donate"]
     best.meta["optimize"] = chosen["config"]["policy"] != "naive"
+    best.meta["tuning_cache"] = {
+        "hit": False, "measurements": n_measured,
+        "path": str(tc.path) if tc is not None else None,
+        "fingerprint": fp,
+    }
+
+    if tc is not None and n_measured:
+        tc.store(slot, fp, {"tuning": best.meta["tuning"]})
     return best

@@ -25,9 +25,10 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["HW", "parse_hlo", "collective_bytes", "dot_flops",
-           "analytic_model_flops", "analytic_hbm_bytes", "roofline_terms",
-           "offload_cost_terms"]
+__all__ = ["HW", "CALIBRATABLE", "parse_hlo", "collective_bytes",
+           "dot_flops", "analytic_model_flops", "analytic_hbm_bytes",
+           "roofline_terms", "offload_cost_terms",
+           "fit_offload_constants", "rank_correlation"]
 
 HW = {
     "peak_flops_bf16": 197e12,   # per chip
@@ -367,6 +368,98 @@ def offload_cost_terms(h2d_bytes: float, d2h_bytes: float,
         "kernel_s": kernel_s,
         "predicted_s": transfer_s + dispatch_s + kernel_s,
     }
+
+
+# The offload-cost constants a measured tuning table can re-fit (the
+# OpenMP-Advisor observation: calibrated beats fixed for offload
+# decisions).  peak_flops/hbm_bw stay fixed — kernel_s is plan-invariant,
+# so the measured table carries no signal about them.
+CALIBRATABLE = ("pcie_bw", "launch_overhead_s", "sync_overhead_s")
+
+# clamp ranges keeping a degenerate fit physical: bandwidth within
+# [100 MB/s, 100 TB/s], per-event overheads within [0, 100 ms]
+_FIT_BOUNDS = {
+    "pcie_bw": (1e8, 1e14),
+    "launch_overhead_s": (0.0, 0.1),
+    "sync_overhead_s": (0.0, 0.1),
+}
+
+
+def fit_offload_constants(rows, hw: Optional[Dict[str, float]] = None
+                          ) -> Optional[Dict[str, float]]:
+    """Least-squares fit of the CALIBRATABLE constants from a measured
+    tuning table.
+
+    ``rows`` are candidate records carrying the ``predict_cost``
+    decomposition (``h2d_bytes``/``d2h_bytes``/``dispatches``/``syncs``/
+    ``kernel_s``) plus ``measured_s``.  The model is exactly
+    ``offload_cost_terms``:
+
+        measured − kernel_s ≈ bytes/pcie_bw + launch·dispatches
+                              + sync·syncs
+
+    which is linear in (1/pcie_bw, launch, sync), so one ``lstsq`` on the
+    (scaled) design matrix recovers them.  Needs ≥ 3 measured rows (three
+    unknowns); returns None when under-determined.  Fitted values are
+    clamped to physical ranges; a non-positive bandwidth coefficient
+    falls back to the incoming default."""
+    import numpy as np
+    h = dict(hw or HW)
+    rows = [r for r in rows if r.get("measured_s") is not None]
+    if len(rows) < 3:
+        return None
+    X = np.array([[r["h2d_bytes"] + r["d2h_bytes"],
+                   r["dispatches"], r["syncs"]] for r in rows], float)
+    y = np.array([max(r["measured_s"] - r.get("kernel_s", 0.0), 0.0)
+                  for r in rows], float)
+    scale = X.max(axis=0)
+    scale[scale == 0] = 1.0
+    try:
+        coef, *_ = np.linalg.lstsq(X / scale, y, rcond=None)
+    except np.linalg.LinAlgError:
+        return None
+    inv_bw, launch, sync = (coef / scale).tolist()
+    fitted = {
+        "pcie_bw": 1.0 / inv_bw if inv_bw > 0 else h["pcie_bw"],
+        "launch_overhead_s": launch,
+        "sync_overhead_s": sync,
+    }
+    for k, (lo, hi) in _FIT_BOUNDS.items():
+        fitted[k] = float(min(max(fitted[k], lo), hi))
+    return fitted
+
+
+def _average_ranks(values) -> "np.ndarray":  # noqa: F821 - doc type
+    import numpy as np
+    v = np.asarray(values, float)
+    order = np.argsort(v, kind="stable")
+    ranks = np.empty(len(v), float)
+    sv = v[order]
+    i = 0
+    while i < len(v):
+        j = i
+        while j + 1 < len(v) and sv[j + 1] == sv[i]:
+            j += 1
+        ranks[order[i:j + 1]] = (i + j) / 2.0
+        i = j + 1
+    return ranks
+
+
+def rank_correlation(xs, ys) -> float:
+    """Spearman rank correlation (average ranks for ties) between two
+    equal-length sequences; 0.0 when either side is constant or there
+    are fewer than two points.  The tuner's figure of merit: the cost
+    model only has to ORDER candidates correctly, so rank correlation —
+    not absolute error — is what calibration must improve."""
+    if len(xs) != len(ys):
+        raise ValueError("rank_correlation needs equal-length sequences")
+    if len(xs) < 2:
+        return 0.0
+    rx, ry = _average_ranks(xs), _average_ranks(ys)
+    sx, sy = rx.std(), ry.std()
+    if sx == 0.0 or sy == 0.0:
+        return 0.0
+    return float(((rx - rx.mean()) * (ry - ry.mean())).mean() / (sx * sy))
 
 
 def roofline_terms(cfg, shape, n_devices: int, hlo_text: str, *,

@@ -1,0 +1,399 @@
+"""Persistent tuning cache + measured calibration + dominance pruning
+(ISSUE 5).
+
+Acceptance criteria under test:
+
+  * a second ``plan(p, policy="auto")`` call on the same program +
+    backend performs ZERO measurements (cache hit) yet returns a
+    ``plan.meta["tuning"]`` table identical to the fresh run,
+  * the fingerprint misses on a program edit, a backend swap, or a
+    cost-model version bump (stale entries are evicted, not reused),
+  * calibration: least squares on the (predicted-terms, measured-time)
+    table recovers the generating constants and demonstrably improves
+    the predicted-vs-measured rank correlation on the golden 3mm table,
+  * dominance pruning merges execution-identical configs (donate on a
+    non-donating backend, fuse with no fusable loops, streams with < 2
+    groups) into one measurement while the table still enumerates the
+    full grid,
+  * measured candidates run on a physically matching backend
+    (``Backend.variant``: real stream count, real donation flag),
+  * the CI tuning-regression gate agrees with the checked-in baseline.
+"""
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (COST_MODEL_VERSION, JaxDeviceBackend,
+                        NumpyHostBackend, Program, TuneCache,
+                        backend_fingerprint, get_backend, plan,
+                        program_fingerprint, tune)
+from repro.core import tunecache as tunecache_mod
+from repro.polybench import build, build_3mm
+from repro.roofline.analysis import (HW, fit_offload_constants,
+                                     offload_cost_terms, rank_correlation)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+CAL_GOLDEN = json.loads((GOLDEN_DIR / "calibration_3mm.json").read_text())
+
+
+def _auto(p, **kw):
+    kw.setdefault("backend", "numpy")
+    kw.setdefault("reps", 1)
+    return plan(p, policy="auto", **kw)
+
+
+class TestCacheHit:
+    def test_second_call_zero_measurements_identical_table(self):
+        """THE acceptance criterion: hit returns the stored winner with
+        no re-measurement and a byte-identical ranked table."""
+        p, _ = build_3mm(n=16)
+        pl1 = _auto(p)
+        info1 = pl1.meta["tuning_cache"]
+        assert info1["hit"] is False and info1["measurements"] > 0
+        pl2 = _auto(p)
+        info2 = pl2.meta["tuning_cache"]
+        assert info2["hit"] is True and info2["measurements"] == 0
+        assert pl2.meta["tuning"] == pl1.meta["tuning"]
+        assert tuple(pl2.ops) == tuple(pl1.ops)
+        assert pl2.meta["fuse_loops"] == pl1.meta["fuse_loops"]
+        assert pl2.meta["donate"] == pl1.meta["donate"]
+        assert pl2.meta["optimize"] == pl1.meta["optimize"]
+
+    def test_refresh_forces_remeasure(self):
+        p, _ = build_3mm(n=16)
+        _auto(p)
+        pl = _auto(p, refresh=True)
+        assert pl.meta["tuning_cache"]["hit"] is False
+        assert pl.meta["tuning_cache"]["measurements"] > 0
+
+    def test_explicit_cache_object(self, tmp_path):
+        p, _ = build_3mm(n=16)
+        tc = TuneCache(tmp_path / "explicit")
+        pl1 = tune(p, backend="numpy", reps=1, cache=tc)
+        assert pl1.meta["tuning_cache"]["path"] == str(tc.path)
+        assert list(tc.path.glob("*.json"))
+        pl2 = tune(p, backend="numpy", reps=1, cache=tc)
+        assert pl2.meta["tuning_cache"]["hit"] is True
+
+    def test_cache_false_disables(self):
+        p, _ = build_3mm(n=16)
+        _auto(p)                              # seeds the env-default cache
+        pl = _auto(p, cache=False)
+        assert pl.meta["tuning_cache"]["hit"] is False
+        assert pl.meta["tuning_cache"]["path"] is None
+        assert pl.meta["tuning_cache"]["measurements"] > 0
+
+    def test_measure_off_bypasses_cache(self):
+        """A prediction-only call must not answer with (or overwrite) a
+        measured table."""
+        p, _ = build_3mm(n=16)
+        _auto(p)
+        pl = tune(p, backend="numpy", measure=False)
+        assert all(c["measured_s"] is None
+                   for c in pl.meta["tuning"]["candidates"])
+        # and the measured entry is still there afterwards
+        assert _auto(p).meta["tuning_cache"]["hit"] is True
+
+    def test_protocol_change_misses_and_variants_coexist(self):
+        """A different measurement protocol misses — into its OWN slot:
+        alternating protocol variants must not evict-thrash each other."""
+        p, _ = build_3mm(n=16)
+        _auto(p)
+        pl = _auto(p, top_k=1)                # different measurement protocol
+        assert pl.meta["tuning_cache"]["hit"] is False
+        assert _auto(p).meta["tuning_cache"]["hit"] is True
+        assert _auto(p, top_k=1).meta["tuning_cache"]["hit"] is True
+
+
+class TestInvalidation:
+    def test_program_edit_invalidates(self, tmp_path):
+        """Same program name, edited block body → stale fingerprint is
+        evicted and the slot re-measured (not silently reused)."""
+        def make(scale):
+            p = Program("editme")
+            p.bind("A", np.ones((8, 8), np.float32))
+            p.offload(lambda xp, A: {"B": A * scale}, reads=("A",),
+                      writes=("B",), name="k")
+            p.host(lambda xp, B: {"o": B[:1]}, reads=("B",),
+                   writes=("o",), name="c")
+            p.set_outputs("o")
+            return p
+
+        tc = TuneCache(tmp_path / "edit")
+        tune(make(2.0), backend="numpy", reps=1, cache=tc)
+        assert len(list(tc.path.glob("*.json"))) == 1
+        pl = tune(make(3.0), backend="numpy", reps=1, cache=tc)
+        assert pl.meta["tuning_cache"]["hit"] is False
+        assert pl.meta["tuning_cache"]["measurements"] > 0
+        # the slot was overwritten, not duplicated
+        assert len(list(tc.path.glob("*.json"))) == 1
+
+    def test_closure_captured_array_resize_invalidates(self):
+        """A block body capturing an array (instead of binding it as an
+        input) must fingerprint its SHAPE: numpy's repr truncates large
+        arrays shapelessly, so repr alone would alias a resized capture
+        onto the stale entry."""
+        def make(n):
+            w = np.ones((n,), np.float32)
+            p = Program("capture")
+            p.bind("x", np.ones((4,), np.float32))
+            p.offload(lambda xp, x: {"y": x * xp.sum(w[:1])},
+                      reads=("x",), writes=("y",), name="k")
+            p.host(lambda xp, y: {"o": y}, reads=("y",), writes=("o",),
+                   name="c")
+            p.set_outputs("o")
+            return p
+
+        assert program_fingerprint(make(2000)) != \
+            program_fingerprint(make(4000))
+        assert program_fingerprint(make(2000)) == \
+            program_fingerprint(make(2000))
+
+    def test_env_disable_sentinel_not_a_directory(self, monkeypatch,
+                                                  tmp_path):
+        """REPRO_TUNE_CACHE=off disables default_cache(); a direct
+        TuneCache() must not mistake the sentinel for a path and create
+        a literal ./off directory."""
+        from repro.core import default_cache
+        monkeypatch.chdir(tmp_path)
+        monkeypatch.setenv("REPRO_TUNE_CACHE", "off")
+        assert default_cache() is None
+        monkeypatch.setenv("XDG_CACHE_HOME", str(tmp_path / "xdg"))
+        assert TuneCache().path == tmp_path / "xdg" / "repro" / "tunecache"
+        assert not (tmp_path / "off").exists()
+
+    def test_fingerprint_tracks_shapes_not_values(self):
+        p16a, _ = build_3mm(n=16)
+        p16b, _ = build_3mm(n=16, seed=1)     # same shapes, new values
+        p8, _ = build_3mm(n=8)
+        assert program_fingerprint(p16a) == program_fingerprint(p16b)
+        assert program_fingerprint(p16a) != program_fingerprint(p8)
+
+    def test_backend_swap_is_a_distinct_slot(self, tmp_path):
+        p, _ = build_3mm(n=16)
+        tc = TuneCache(tmp_path / "be")
+        tune(p, backend="numpy", reps=1, cache=tc)
+        pl = tune(p, backend="jax", reps=1, cache=tc)
+        assert pl.meta["tuning_cache"]["hit"] is False
+        # both entries coexist (different slots, no eviction)
+        assert tune(p, backend="numpy", reps=1,
+                    cache=tc).meta["tuning_cache"]["hit"] is True
+        assert tune(p, backend="jax", reps=1,
+                    cache=tc).meta["tuning_cache"]["hit"] is True
+
+    def test_cost_model_version_bump_invalidates(self, monkeypatch):
+        p, _ = build_3mm(n=16)
+        _auto(p)
+        monkeypatch.setattr(tunecache_mod, "COST_MODEL_VERSION",
+                            COST_MODEL_VERSION + 1000)
+        pl = _auto(p)
+        assert pl.meta["tuning_cache"]["hit"] is False
+        assert pl.meta["tuning_cache"]["measurements"] > 0
+
+
+class TestDominancePruning:
+    def test_donate_and_fuse_merge_on_numpy_loopfree(self):
+        """3mm is loop-free and numpy has no donation: the fuse and
+        donate axes cannot change execution, so all four flag combos of
+        each placement collapse into one measured class."""
+        p, _ = build_3mm(n=16)
+        pl = _auto(p)
+        valid = [c for c in pl.meta["tuning"]["candidates"] if c["valid"]]
+        survivors = [c for c in valid if c["alias_of"] is None]
+        assert all(not s["config"]["donate"] for s in survivors)
+        assert pl.meta["tuning_cache"]["measurements"] == len(survivors)
+        # the grid is still fully enumerated (paper's axes preserved)
+        assert len(valid) == 48
+        donate_recs = [c for c in valid if c["config"]["donate"]]
+        assert donate_recs and all(c["alias_of"] for c in donate_recs)
+
+    def test_fuse_distinct_with_fusable_loop(self):
+        """gemm's iterated kernel CAN fuse: fuse on/off are different
+        executions and must be measured separately."""
+        p, _ = build("gemm", n=16, iters=4)
+        pl = _auto(p)
+        survivors = [c for c in pl.meta["tuning"]["candidates"]
+                     if c["valid"] and c["alias_of"] is None]
+        opt_fuse = {s["config"]["fuse_loops"] for s in survivors
+                    if s["config"]["policy"] == "optimized"}
+        assert opt_fuse == {True, False}
+
+    def test_streams_merge_with_single_group(self):
+        """3mm forms one directive group → stream assignment is
+        identical for any stream count → one class across the axis."""
+        p, _ = build_3mm(n=16)
+        pl = _auto(p)
+        valid = [c for c in pl.meta["tuning"]["candidates"] if c["valid"]]
+        streams_of_survivors = {c["config"]["n_streams"] for c in valid
+                                if c["alias_of"] is None}
+        assert streams_of_survivors == {1}
+
+    def test_alias_records_share_class_numbers(self):
+        p, _ = build_3mm(n=16)
+        pl = _auto(p)
+        valid = {c["label"]: c for c in pl.meta["tuning"]["candidates"]
+                 if c["valid"]}
+        for c in valid.values():
+            if c["alias_of"]:
+                surv = valid[c["alias_of"]]
+                assert c["label"] in surv["aliases"]
+                assert c["measured_s"] == surv["measured_s"]
+                assert c["predicted_s"] == surv["predicted_s"]
+
+
+class TestBackendVariant:
+    def test_jax_variant_pool(self):
+        be = JaxDeviceBackend()
+        v3 = be.variant(n_streams=3)
+        assert v3.n_streams == 3 and v3.donate == be.donate
+        assert be.variant(n_streams=3) is v3          # memoized
+        assert be.variant() is be
+        # variant-of-variant folds back onto the original instance so
+        # jit/lowering caches are shared across tuning calls
+        assert v3.variant(n_streams=be.n_streams, donate=False) is be
+        vd = be.variant(donate=True)
+        assert vd.donate and vd.n_streams == be.n_streams
+        assert vd.variant(donate=False) is be
+
+    def test_numpy_has_no_variants(self):
+        be = NumpyHostBackend()
+        assert be.variant(n_streams=4, donate=True) is be
+        assert not be.supports_donation
+        assert JaxDeviceBackend.supports_donation
+
+    def test_measure_uses_physical_stream_count(self, monkeypatch):
+        """A streams-3 candidate must be timed on a 3-queue backend, not
+        folded onto the caller's 2-queue instance."""
+        from repro.core import tuner as tuner_mod
+        seen = []
+        orig = tuner_mod._measure
+
+        def spy(pl, cfg, be, reps):
+            v = be.variant(n_streams=cfg.n_streams, donate=cfg.donate)
+            seen.append((cfg.n_streams, v.n_streams, cfg.donate,
+                         getattr(v, "donate", False)))
+            return orig(pl, cfg, be, reps)
+
+        monkeypatch.setattr(tuner_mod, "_measure", spy)
+        p, _ = build("gemm", n=8, iters=2)
+        tune(p, backend="jax", reps=1, cache=False)
+        assert seen
+        for want_s, got_s, want_d, got_d in seen:
+            assert got_s == want_s and got_d == want_d
+
+
+class TestCalibration:
+    def _golden_rows(self):
+        return [dict(r) for r in CAL_GOLDEN["rows"]]
+
+    def test_fit_recovers_generating_constants(self):
+        """The golden table's measured times were synthesized from known
+        constants; the least-squares fit must recover them."""
+        fitted = fit_offload_constants(self._golden_rows())
+        for k, v in CAL_GOLDEN["true_hw"].items():
+            assert fitted[k] == pytest.approx(v, rel=1e-6), k
+
+    def test_calibration_improves_rank_correlation(self):
+        """Acceptance: calibration demonstrably improves the
+        predicted-vs-measured rank correlation on the golden 3mm table."""
+        rows = self._golden_rows()
+        meas = [r["measured_s"] for r in rows]
+        before = rank_correlation([r["predicted_s"] for r in rows], meas)
+        fitted = fit_offload_constants(rows)
+        hw2 = dict(HW)
+        hw2.update(fitted)
+        after_pred = [offload_cost_terms(
+            r["h2d_bytes"], r["d2h_bytes"], r["dispatches"], r["syncs"],
+            r["flops"], r["kernel_bytes"], hw=hw2)["predicted_s"]
+            for r in rows]
+        after = rank_correlation(after_pred, meas)
+        assert before < 1.0          # default constants mis-rank the table
+        assert after == pytest.approx(1.0)
+        assert after > before
+
+    def test_fit_underdetermined_returns_none(self):
+        rows = self._golden_rows()[:2]
+        assert fit_offload_constants(rows) is None
+        assert fit_offload_constants([]) is None
+
+    def test_rank_correlation_basics(self):
+        assert rank_correlation([1, 2, 3], [10, 20, 30]) == pytest.approx(1)
+        assert rank_correlation([1, 2, 3], [3, 2, 1]) == pytest.approx(-1)
+        assert rank_correlation([1, 1, 1], [1, 2, 3]) == 0.0
+        assert rank_correlation([1.0], [2.0]) == 0.0
+        with pytest.raises(ValueError):
+            rank_correlation([1, 2], [1])
+
+    def test_fitted_constants_priced_into_next_program(self, tmp_path):
+        """Constants stored for a backend price the NEXT tune call on
+        that backend (the OpenMP-Advisor loop: measure → fit → predict)."""
+        tc = TuneCache(tmp_path / "cal")
+        be = get_backend("numpy")
+        fitted = {"pcie_bw": 123e9, "launch_overhead_s": 7e-5,
+                  "sync_overhead_s": 3e-6}
+        tc.store_calibration(backend_fingerprint(be), HW, fitted)
+        p, _ = build_3mm(n=16)
+        pl = tune(p, backend="numpy", reps=1, cache=tc)
+        assert pl.meta["tuning"]["hw"]["pcie_bw"] == 123e9
+        assert pl.meta["tuning"]["hw"]["launch_overhead_s"] == 7e-5
+        # and can be switched off
+        pl2 = tune(p, backend="numpy", reps=1, cache=tc,
+                   use_calibration=False)
+        assert pl2.meta["tuning"]["hw"]["pcie_bw"] == HW["pcie_bw"]
+
+    def test_calibration_version_keyed(self, tmp_path, monkeypatch):
+        tc = TuneCache(tmp_path / "calv")
+        be_key = backend_fingerprint(get_backend("numpy"))
+        tc.store_calibration(be_key, HW, {"pcie_bw": 9e9})
+        assert tc.load_calibration(be_key, HW) == {"pcie_bw": 9e9}
+        monkeypatch.setattr(tunecache_mod, "COST_MODEL_VERSION",
+                            COST_MODEL_VERSION + 1000)
+        assert tc.load_calibration(be_key, HW) is None
+
+    def test_live_run_records_calibration(self):
+        """A measured tune records the fit verdict: row count, both
+        correlations, and accepted ⇒ never a correlation regression."""
+        p, _ = build("gemm", n=16, iters=4)
+        pl = _auto(p)
+        cal = pl.tuning_calibration()
+        assert cal is not None
+        assert cal["n_rows"] >= 3
+        assert cal["rank_corr_before"] is not None
+        if cal["accepted"]:
+            assert cal["rank_corr_after"] >= cal["rank_corr_before"]
+
+
+class TestRegressionGate:
+    """The CI gate must agree with the checked-in baseline — this is the
+    same check the workflow step runs, so baseline drift fails here
+    first (regenerate: PYTHONPATH=src python
+    benchmarks/check_tuning_baseline.py --update)."""
+
+    @pytest.fixture()
+    def gate(self):
+        bench_dir = str(pathlib.Path(__file__).parent.parent / "benchmarks")
+        monkey = bench_dir not in sys.path
+        if monkey:
+            sys.path.insert(0, bench_dir)
+        try:
+            import check_tuning_baseline
+            yield check_tuning_baseline
+        finally:
+            if monkey:
+                sys.path.remove(bench_dir)
+
+    def test_baseline_matches_current_cost_model(self, gate):
+        problems = gate.check()
+        assert problems == []
+
+    def test_gate_flags_winner_change(self, gate, monkeypatch, tmp_path):
+        golden = json.loads(gate.BASELINE_PATH.read_text())
+        golden["programs"]["table2_3mm"]["predicted_winner"] = "bogus/label"
+        doctored = tmp_path / "tuning_baseline.json"
+        doctored.write_text(json.dumps(golden))
+        monkeypatch.setattr(gate, "BASELINE_PATH", doctored)
+        problems = gate.check()
+        assert any("predicted winner changed" in p for p in problems)

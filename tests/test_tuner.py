@@ -63,6 +63,18 @@ class TestAcceptance:
             assert c["predicted_s"] > 0.0
             assert c["measured_s"] is not None and c["measured_s"] > 0.0
             assert c["rank"] is not None
+        # dominance pruning (ISSUE 5): _measure ran exactly once per
+        # distinct execution class — merged configs inherit their class
+        # survivor's number instead of re-measuring it
+        survivors = [c for c in valid if c["alias_of"] is None]
+        assert pl.meta["tuning_cache"]["measurements"] == len(survivors)
+        assert len(survivors) < len(valid)
+        for c in valid:
+            if c["alias_of"] is not None:
+                surv = next(s for s in survivors
+                            if s["label"] == c["alias_of"])
+                assert c["measured_s"] == surv["measured_s"]
+                assert c["predicted_s"] == surv["predicted_s"]
         # chosen is the measured argmin → ≤ the fixed optimized plan
         chosen = _rec_for(tuning, tuning["chosen"])
         fixed = _rec_for(tuning, FIXED_OPTIMIZED)
@@ -277,12 +289,18 @@ class TestInvalidCandidates:
 
 class TestTunerKnobs:
     def test_top_k_limits_measurement(self):
+        """top_k bounds the number of MEASURED execution classes (merged
+        configs still inherit the class result)."""
         p, _ = build_3mm(n=16)
-        pl = tune(p, backend="numpy", top_k=2, reps=1)
+        pl = tune(p, backend="numpy", top_k=1, reps=1)
         valid = [c for c in pl.meta["tuning"]["candidates"] if c["valid"]]
-        measured = [c for c in valid if c["measured_s"] is not None]
-        assert len(measured) == 2
-        assert sorted(c["rank"] for c in measured) == [1, 2]
+        assert pl.meta["tuning_cache"]["measurements"] == 1
+        measured = [c for c in valid if c["measured_s"] is not None
+                    and c["alias_of"] is None]
+        assert len(measured) == 1 and measured[0]["rank"] == 1
+        # the other class (naive placement) was skipped entirely
+        assert any(c["measured_s"] is None for c in valid)
+        assert pl.meta["tuning"]["chosen"] == measured[0]["label"]
 
     def test_measure_off_ranks_by_prediction(self):
         p, _ = build_3mm(n=16)

@@ -5,10 +5,11 @@ plan-space tuner's DETERMINISTIC surface — the cost model's predicted
 ranking — against silent regressions:
 
 1. Re-enumerates the gate programs (the ``directive_micro`` benchmark
-   programs + the 3mm worked example, at ``--quick`` sizes) with
-   ``measure=False``, default hardware constants, and no cache, and
-   compares the predicted winner label + predicted cost + valid-candidate
-   count against ``tests/golden/tuning_baseline.json``.
+   programs + the 3mm worked example + the flash-attention step with its
+   kernel tile axis, at ``--quick`` sizes) with ``measure=False``,
+   default hardware constants, and no cache, and compares the predicted
+   winner label + predicted cost + valid-candidate count + enumerated
+   kernel-variant count against ``tests/golden/tuning_baseline.json``.
 2. Cross-checks ``tuning_report.json`` (the artifact the smoke step just
    wrote, ``--report PATH``): its predicted-rank-1 candidate per program
    must match the golden winner within the same tolerance.  The measured
@@ -45,10 +46,14 @@ REL_TOL = 0.05   # predicted_s drift allowed (HLO flop counts move a
                  # little across jax versions; label changes never do)
 
 # ground truth for the synthesized calibration fixture: slow link, fat
-# per-dispatch overheads — far from HW defaults, so dispatch-heavy
-# candidates reorder vs. the default prediction
+# per-dispatch overheads, and a device roofline (hbm_bw /
+# peak_flops_bf16, machine balance 10 flop/byte) far from HW defaults —
+# so dispatch-heavy candidates reorder vs. the default prediction AND
+# the fixture has both compute-bound and memory-bound rows for the
+# joint two-level fit to separate
 _CAL_TRUE = {"pcie_bw": 4e9, "launch_overhead_s": 8e-4,
-             "sync_overhead_s": 2e-4}
+             "sync_overhead_s": 2e-4,
+             "hbm_bw": 2e11, "peak_flops_bf16": 2e12}
 _CAL_ROW_KEYS = ("label", "h2d_bytes", "d2h_bytes", "loads", "stores",
                  "syncs", "dispatches", "flops", "kernel_bytes",
                  "kernel_s", "predicted_s")
@@ -56,6 +61,7 @@ _CAL_ROW_KEYS = ("label", "h2d_bytes", "d2h_bytes", "loads", "stores",
 
 def _gate_programs() -> Dict[str, object]:
     import directive_micro as dm
+    from repro.optim.offload import attention_step_program
     from repro.polybench import build_3mm
     saved = dm.N, dm.ITERS
     dm.N, dm.ITERS = QUICK_N, QUICK_ITERS
@@ -64,6 +70,7 @@ def _gate_programs() -> Dict[str, object]:
             "fig4_advancedload": dm._advancedload_prog(),
             "fig5_delegatestore": dm._delegatestore_prog(),
             "table2_3mm": build_3mm(n=QUICK_N)[0],
+            "attn_step": attention_step_program(n_steps=1),
         }
     finally:
         dm.N, dm.ITERS = saved
@@ -77,6 +84,7 @@ def _predicted_rank1(candidates: List[Dict]) -> Dict:
 def compute_baseline() -> Dict[str, Dict]:
     """Deterministic per-program baseline: predicted winner under
     default constants, no measurement, no cache, no calibration."""
+    from directive_micro import n_kernel_variants
     from repro.core import tune
     out = {}
     for name, prog in sorted(_gate_programs().items()):
@@ -88,6 +96,7 @@ def compute_baseline() -> Dict[str, Dict]:
             "predicted_winner": top["label"],
             "predicted_s": top["predicted_s"],
             "n_valid": len(valid),
+            "n_kernel_variants": n_kernel_variants(valid),
         }
     return out
 
@@ -172,6 +181,12 @@ def check(report_path: str = None) -> List[str]:
             problems.append(
                 f"{name}: valid candidates shrank "
                 f"{want['n_valid']} -> {got['n_valid']}")
+        if got["n_kernel_variants"] < want.get("n_kernel_variants", 1):
+            problems.append(
+                f"{name}: enumerated kernel variants shrank "
+                f"{want['n_kernel_variants']} -> "
+                f"{got['n_kernel_variants']} — the kernel tile axis "
+                f"stopped being explored")
     if report_path:
         problems += _check_report(report_path, golden, tol)
     return problems

@@ -26,9 +26,12 @@ timed columns.
 
 ``--tune`` additionally runs the plan-space explorer
 (``plan(p, policy="auto")``) on each benchmark program plus the 3mm
-worked example, prints the winner per program, and writes the full
-ranked predicted-vs-measured tables to ``tuning_report.json`` (the CI
-artifact).  ``--quick`` shrinks sizes for CI smoke runs.
+worked example and the flash-attention step (the kernel-axis program:
+its tile variants are enumerated and measured), prints the winner per
+program, and writes the full ranked predicted-vs-measured tables to
+``tuning_report.json`` (the CI artifact) plus a dated snapshot
+``BENCH_<YYYYMMDD>.json`` at the repo root so successive runs can be
+diffed.  ``--quick`` shrinks sizes for CI smoke runs.
 """
 from __future__ import annotations
 
@@ -174,20 +177,27 @@ def bench_tuner(out_path: str = "tuning_report.json") -> Dict:
     The measured calibration is still fitted and reported (the 3mm
     table's before/after rank correlations land in the artifact)."""
     from repro.core import COST_MODEL_VERSION
+    from repro.optim.offload import attention_step_program
     from repro.polybench import build_3mm
     p3, _ = build_3mm(n=min(N, 256))
     programs = {
         "fig4_advancedload": _advancedload_prog(),
         "fig5_delegatestore": _delegatestore_prog(),
         "table2_3mm": p3,
+        "attn_step": attention_step_program(n_steps=1),
     }
+    # the kernel program's interesting axis is the tile grid; pin the
+    # plan axes so the smoke run measures kernel VARIANTS (interpret-mode
+    # Pallas on CPU CI is too slow for the full 48-config cross product)
+    grid_kw = {"attn_step": dict(policies=("optimized",), streams=(1,),
+                                 fuse=(True,), donate=(False,))}
     report: Dict[str, Dict] = {"params": {"N": N, "ITERS": ITERS},
                                "cost_model_version": COST_MODEL_VERSION,
                                "programs": {}, "summary": {}}
     rows = {}
     for name, prog in sorted(programs.items()):
         pl = plan(prog, policy="auto", reps=max(1, REPS - 1),
-                  use_calibration=False)
+                  use_calibration=False, **grid_kw.get(name, {}))
         tuning = pl.meta["tuning"]
         cache_info = pl.meta["tuning_cache"]
         chosen = pl.predicted_cost()
@@ -197,6 +207,7 @@ def bench_tuner(out_path: str = "tuning_report.json") -> Dict:
             "chosen": tuning["chosen"],
             "n_candidates": sum(1 for c in tuning["candidates"]
                                 if c["valid"]),
+            "n_kernel_variants": n_kernel_variants(tuning["candidates"]),
             "predicted_ms": chosen["predicted_s"] * 1e3,
             "measured_ms": (chosen["measured_s"] or 0.0) * 1e3,
             "cache_hit": cache_info["hit"],
@@ -207,6 +218,31 @@ def bench_tuner(out_path: str = "tuning_report.json") -> Dict:
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True, default=float)
     return {"name": "plan_tuner", "report_path": out_path, "rows": rows}
+
+
+def n_kernel_variants(candidates) -> int:
+    """Distinct kernel tile-variant assignments enumerated in a tuning
+    table (1 for kernel-free programs: the single empty assignment)."""
+    return len({json.dumps(c["config"].get("kernel_variants") or [])
+                for c in candidates if c["valid"]})
+
+
+def write_bench_snapshot(rows: Dict, path: str = None) -> str:
+    """Dated tuning summary at the repo root (``BENCH_<YYYYMMDD>.json``)
+    so successive runs of ``--tune`` can be diffed; CI uploads it as an
+    artifact."""
+    from repro.core import COST_MODEL_VERSION
+    if path is None:
+        path = f"BENCH_{time.strftime('%Y%m%d')}.json"
+    snap = {
+        "date": time.strftime("%Y-%m-%d"),
+        "cost_model_version": COST_MODEL_VERSION,
+        "params": {"N": N, "ITERS": ITERS, "REPS": REPS},
+        "programs": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True, default=float)
+    return path
 
 
 def main(argv=None):
@@ -221,6 +257,8 @@ def main(argv=None):
                              for k, v in row.items())
             print(f"tune_{name},{row['measured_ms'] * 1e3:.0f},{extra}")
         print(f"tuning report written to {r['report_path']}")
+        snap = write_bench_snapshot(r["rows"])
+        print(f"bench snapshot written to {snap}")
         return [r]
     results = []
     for bench in (bench_advancedload, bench_delegatestore):

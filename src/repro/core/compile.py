@@ -50,7 +50,7 @@ import numpy as np
 from .backend import Backend
 from .executor import (ExecStats, PlanExecutionError, _Slot, _nest,
                        _run_block, do_load, do_release, do_store, do_sync,
-                       dummy_arg)
+                       dummy_arg, kernel_fn)
 from .ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, GroupDecl,
                  Plan, PlanOp, Program, Release, Synchronize)
 
@@ -137,21 +137,23 @@ def _build_segment(run: List[PlanOp], program: Program) -> _Segment:
                     n_stores=n_stores, final_writes=tuple(writes_order))
 
 
-def _replay_block(blk, xp, env: Dict[str, Any], get_dummy) -> None:
+def _replay_block(blk, xp, env: Dict[str, Any], get_dummy,
+                  variants=None) -> None:
     """The single shared per-block replay both compiled paths trace:
     actual reads come from ``env``, pruned (dead) declared reads from
     ``get_dummy(var)``, and every write lands back in ``env``.  Keeping
     this in one place is what keeps segment mode and fused-loop mode
-    bitwise-interchangeable."""
+    bitwise-interchangeable (and is the one spot kernel tile variants
+    bind into compiled traces)."""
     actual = set(blk.effective_reads())
     kwargs = {v: (env[v] if v in actual else get_dummy(v))
               for v in blk.reads}
-    out = blk.fn(xp, **kwargs)
+    out = kernel_fn(blk, variants)(xp, **kwargs)
     for w in blk.writes:
         env[w] = out[w]
 
 
-def _make_fused(seg: _Segment, program: Program, xp):
+def _make_fused(seg: _Segment, program: Program, xp, variants=None):
     """The traced body: replays the segment symbolically; returns the
     store-captured values followed by the final device value of every
     block-written variable."""
@@ -170,7 +172,7 @@ def _make_fused(seg: _Segment, program: Program, xp):
                 env[it[1].var] = args[load_pos[it[2]]]
             elif it[0] == "block":
                 _replay_block(program.blocks[it[1]], xp, env,
-                              lambda v: args[dummy_pos[v]])
+                              lambda v: args[dummy_pos[v]], variants)
             elif it[0] == "store":
                 stores[it[2]] = env[it[1].var]
         return tuple(stores) + tuple(env[v] for v in seg.final_writes)
@@ -206,7 +208,7 @@ class _FusedLoop:
             self.logical_iters = self.n_iters
 
 
-def _make_loop_body(seg: _Segment, program: Program, xp):
+def _make_loop_body(seg: _Segment, program: Program, xp, variants=None):
     """The per-iteration body replayed over a carry dict: blocks run in
     program order reading/writing the carry (via the same ``_replay_block``
     the segment path traces); sync items are wait points handled by the
@@ -216,7 +218,7 @@ def _make_loop_body(seg: _Segment, program: Program, xp):
         for it in seg.items:
             if it[0] == "block":
                 _replay_block(program.blocks[it[1]], xp, env,
-                              lambda v: env[_DUMMY + v])
+                              lambda v: env[_DUMMY + v], variants)
         return env
     return body
 
@@ -266,7 +268,7 @@ def _make_nested_body(child: _FusedLoop, be: Backend):
 
 
 def _try_fuse_loop(loop_id: int, inner: List[Tuple], p: Plan,
-                   be: Backend) -> Optional[Tuple]:
+                   be: Backend, variants=None) -> Optional[Tuple]:
     """Return a ``("fused_loop", _FusedLoop)`` node when the loop body is
     provably pure-device: the planner marked the loop invariant AND the
     body lowered to exactly one segment with blocks but no transfers —
@@ -296,7 +298,7 @@ def _try_fuse_loop(loop_id: int, inner: List[Tuple], p: Plan,
         return None
     return ("fused_loop", _FusedLoop(
         loop_id=loop_id, n_iters=n_iters, seg=seg,
-        body_fn=_make_loop_body(seg, p.program, be.xp)))
+        body_fn=_make_loop_body(seg, p.program, be.xp, variants)))
 
 
 def _donatable(seg: _Segment) -> Tuple[int, ...]:
@@ -314,7 +316,8 @@ def _donatable(seg: _Segment) -> Tuple[int, ...]:
 # Lowering: plan tree -> schedule of host blocks / segments / loops.
 # --------------------------------------------------------------------------
 
-def _lower(tree, p: Plan, be: Backend, fuse_loops: bool) -> List[Tuple]:
+def _lower(tree, p: Plan, be: Backend, fuse_loops: bool,
+           variants=None) -> List[Tuple]:
     program = p.program
     schedule: List[Tuple] = []
     run: List[PlanOp] = []
@@ -330,7 +333,7 @@ def _lower(tree, p: Plan, be: Backend, fuse_loops: bool) -> List[Tuple]:
         if run:
             seg = _build_segment(run, program)
             if seg.blocks:
-                fused = _make_fused(seg, program, be.xp)
+                fused = _make_fused(seg, program, be.xp, variants)
                 seg.fused = be.compile_fused(fused, _donatable(seg))
             schedule.append(("seg", seg))
         run, dirty_vars = [], set()
@@ -339,8 +342,8 @@ def _lower(tree, p: Plan, be: Backend, fuse_loops: bool) -> List[Tuple]:
         if item[0] == "loop":
             flush()
             _, loop_id, body = item
-            inner = _lower(body, p, be, fuse_loops)
-            node = _try_fuse_loop(loop_id, inner, p, be) \
+            inner = _lower(body, p, be, fuse_loops, variants)
+            node = _try_fuse_loop(loop_id, inner, p, be, variants) \
                 if fuse_loops else None
             schedule.append(node or ("loop", loop_id, inner))
             continue
@@ -514,12 +517,15 @@ class CompiledPlan:
 
 
 def compile_plan(p: Plan, backend: Backend, *,
-                 fuse_loops: bool = True) -> CompiledPlan:
+                 fuse_loops: bool = True,
+                 kernel_variants=None) -> CompiledPlan:
     """Lower ``p`` for ``backend``; segments are traced/compiled lazily on
     first call by the backend's compiler (``jax.jit`` caches thereafter).
     ``fuse_loops=False`` keeps eligible loops as per-iteration segment
     dispatches (the PR-1 behaviour) — useful for benchmarking the
-    whole-loop lowering win in isolation."""
+    whole-loop lowering win in isolation.  ``kernel_variants`` binds tile
+    parameters onto kernel-tagged blocks inside the traced bodies (see
+    ``execute``)."""
     tree = _nest(p.ops, p.program)
-    schedule = _lower(tree, p, backend, fuse_loops)
+    schedule = _lower(tree, p, backend, fuse_loops, kernel_variants)
     return CompiledPlan(plan=p, backend=backend, schedule=schedule)

@@ -39,7 +39,7 @@ from .ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, GroupDecl,
                  Plan, PlanOp, Program, Release, Synchronize)
 
 __all__ = ["execute", "run_host_oracle", "ExecStats", "PlanExecutionError",
-           "group_vars"]
+           "group_vars", "kernel_fn"]
 
 
 class PlanExecutionError(RuntimeError):
@@ -91,9 +91,38 @@ def _nbytes(x) -> int:
     return int(np.prod(np.shape(x))) * np.dtype(x.dtype).itemsize
 
 
+def _kv_norm(kv) -> Dict[str, Dict[str, int]]:
+    """Canonical {kernel: {param: int}} view of a kernel-variants mapping
+    (accepts the tuple-of-pairs form KernelVariant/JSON round-trips use)."""
+    if not kv:
+        return {}
+    return {str(k): {str(n): int(v) for n, v in dict(params).items()}
+            for k, params in dict(kv).items()}
+
+
+def _kv_key(kv: Dict[str, Dict[str, int]]):
+    """Hashable identity of a variant choice (compiled-plan cache key)."""
+    return tuple(sorted((k, tuple(sorted(p.items())))
+                        for k, p in kv.items()))
+
+
+def kernel_fn(blk, variants: Optional[Dict[str, Dict[str, int]]] = None):
+    """The callable to launch for ``blk``: kernel-tagged blocks get their
+    chosen tile parameters bound as keyword arguments (memoized partials,
+    so backend jit caches keyed on fn identity still hit); every other
+    block launches ``blk.fn`` unchanged."""
+    if getattr(blk, "kernel", None) and variants:
+        params = variants.get(blk.kernel)
+        if params:
+            from repro.kernels.variants import bind_variant
+            return bind_variant(blk.fn, tuple(sorted(params.items())))
+    return blk.fn
+
+
 def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
             *, check: bool = True, mode: str = "interpreted",
-            backend: Any = None, fuse_loops: Optional[bool] = None
+            backend: Any = None, fuse_loops: Optional[bool] = None,
+            kernel_variants: Optional[Dict[str, Dict[str, int]]] = None
             ) -> Tuple[Dict[str, np.ndarray], ExecStats]:
     """Run the plan; return (program outputs on host, stats).
 
@@ -108,6 +137,12 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
     the variant the tuner measured (donation still needs the matching
     backend — use ``winner_exec_kwargs``).
 
+    ``kernel_variants`` maps kernel names to tile parameters
+    ({"flash_attention": {"block_q": 128, "block_k": 64}}) for
+    kernel-tagged blocks; when left None it follows the plan
+    (``meta["kernel_variants"]``, set by the tuner's winner), so a tuned
+    plan launches the winning tile sizes by default.
+
     One-time plan-lowering cost is reported as ``stats.compile_time`` and
     excluded from ``stats.wall_time``, so first-call and steady-state runs
     report comparable wall times.
@@ -116,6 +151,9 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
         raise ValueError(f"unknown execution mode {mode!r}")
     if fuse_loops is None:
         fuse_loops = bool(p.meta.get("fuse_loops", True))
+    if kernel_variants is None:
+        kernel_variants = p.meta.get("kernel_variants")
+    kernel_variants = _kv_norm(kernel_variants)
     be = get_backend(backend)
     program = p.program
     env: Dict[str, _Slot] = {}
@@ -133,12 +171,15 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
         from .compile import compile_plan
         cache = p.meta.setdefault("_compiled", {})
         key = be.name if fuse_loops else be.name + ":nofuse"
+        if kernel_variants:
+            key += f"|kv={_kv_key(kernel_variants)}"
         fingerprint = hash(tuple(p.ops))   # ops may be mutated by callers
         compiled, fp = cache.get(key, (None, None))
         if compiled is None or compiled.backend is not be \
                 or fp != fingerprint:
             tc = time.perf_counter()
-            compiled = compile_plan(p, be, fuse_loops=fuse_loops)
+            compiled = compile_plan(p, be, fuse_loops=fuse_loops,
+                                    kernel_variants=kernel_variants)
             stats.compile_time = time.perf_counter() - tc
             cache[key] = (compiled, fingerprint)
         t0 = time.perf_counter()
@@ -148,7 +189,7 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
         # it stays inside wall_time: it IS part of interpreted dispatch
         t0 = time.perf_counter()
         tree = _nest(p.ops, program)
-        _run(tree, p, env, stats, check, be)
+        _run(tree, p, env, stats, check, be, kernel_variants)
     stats.wall_time = time.perf_counter() - t0
 
     outs = {}
@@ -189,19 +230,20 @@ def _nest(ops: List[PlanOp], program: Program):
 
 
 def _run(tree, p: Plan, env: Dict[str, _Slot], stats: ExecStats,
-         check: bool, be: Backend) -> None:
+         check: bool, be: Backend, variants=None) -> None:
     program = p.program
     for item in tree:
         if item[0] == "loop":
             _, loop_id, body = item
             for _ in range(program.loops[loop_id].n_iters):
-                _run(body, p, env, stats, check, be)
+                _run(body, p, env, stats, check, be, variants)
             continue
         op: PlanOp = item[1]
         if op.kind == "directive":
             run_directive(op.directive, env, stats, check, be, p)
         elif op.kind == "block":
-            _run_block(program, op.block_idx, env, stats, check, be)
+            _run_block(program, op.block_idx, env, stats, check, be,
+                       variants)
 
 
 # -- directive primitives (shared with the compiled driver) -----------------
@@ -302,7 +344,8 @@ def dummy_arg(slot: _Slot, be: Backend):
 
 
 def _run_block(program: Program, idx: int, env: Dict[str, _Slot],
-               stats: ExecStats, check: bool, be: Backend) -> None:
+               stats: ExecStats, check: bool, be: Backend,
+               variants=None) -> None:
     blk = program.blocks[idx]
     actual = set(blk.effective_reads())
     if blk.kind is BlockKind.OFFLOAD:
@@ -321,7 +364,8 @@ def _run_block(program: Program, idx: int, env: Dict[str, _Slot],
                 slot.valid_device = True
             args.append(slot.device)
         t = time.perf_counter()
-        outs = be.launch(blk.fn, blk.reads, blk.writes, args)
+        outs = be.launch(kernel_fn(blk, variants), blk.reads, blk.writes,
+                         args)
         stats.kernel_time += time.perf_counter() - t
         stats.kernel_calls += 1
         for w, val in zip(blk.writes, outs):

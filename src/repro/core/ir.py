@@ -62,6 +62,12 @@ class Block:
     name: str
     # Filled in by analysis:
     actual_reads: Optional[Tuple[str, ...]] = None
+    # Pallas kernel name (repro.kernels.variants registry) when this block
+    # is a tunable kernel launch; its declared ``reads`` are then, in
+    # order, the kernel's array operands.  The tuner crosses the plan grid
+    # with the kernel's tile variants and the executor binds the chosen
+    # tile kwargs onto ``fn`` at launch.
+    kernel: Optional[str] = None
 
     @property
     def label(self) -> str:
@@ -100,12 +106,14 @@ class Program:
         """Vars the caller wants back on the host when the program ends."""
         self.outputs = tuple(names)
 
-    def _add_block(self, kind: BlockKind, fn, reads, writes, name) -> Block:
+    def _add_block(self, kind: BlockKind, fn, reads, writes, name,
+                   kernel=None) -> Block:
         blk = Block(
             idx=len(self.blocks), kind=kind, fn=fn,
             reads=tuple(reads), writes=tuple(writes),
             loop_path=tuple(self._loop_stack),
             name=name or fn.__name__,
+            kernel=kernel,
         )
         self.blocks.append(blk)
         return blk
@@ -115,9 +123,17 @@ class Program:
         return self._add_block(BlockKind.HOST, fn, reads, writes, name)
 
     def offload(self, fn, *, reads: Sequence[str], writes: Sequence[str],
-                name: str = "") -> Block:
-        """The analogue of ``#pragma omp parallel for target cuda``."""
-        return self._add_block(BlockKind.OFFLOAD, fn, reads, writes, name)
+                name: str = "", kernel: Optional[str] = None) -> Block:
+        """The analogue of ``#pragma omp parallel for target cuda``.
+
+        ``kernel`` tags the block as a tunable Pallas kernel launch (a name
+        from ``repro.kernels.variants.KERNELS``); ``fn`` must then accept
+        that kernel's tile parameters as keyword arguments (e.g.
+        ``block_q=``/``block_k=``) and ``reads`` must list the kernel's
+        array operands in the registry's order.
+        """
+        return self._add_block(BlockKind.OFFLOAD, fn, reads, writes, name,
+                               kernel=kernel)
 
     def loop(self, n_iters: int) -> "_LoopCtx":
         return _LoopCtx(self, n_iters)
@@ -262,7 +278,15 @@ class Plan:
     #       configs.  "hw" is the pricing constants actually used
     #       (calibrated when a fit was cached); "calibration" records
     #       the fit: {"n_rows", "fitted", "accepted",
-    #       "rank_corr_before", "rank_corr_after"}
+    #       "rank_corr_before", "rank_corr_after"}.
+    #       "kernel_variants" (inside "tuning") — the winner's tile
+    #       choice per kernel-tagged block:
+    #       {kernel_name: {param: value}}, e.g.
+    #       {"flash_attention": {"block_q": 128, "block_k": 64}};
+    #       empty dict when the program has no kernel blocks
+    #   "kernel_variants"    — the same mapping hoisted to the top level
+    #       so ``execute()`` (and winner_exec_kwargs) launch the winning
+    #       tile sizes by default
     #   "tuning_cache"       — {"hit", "measurements", "path",
     #       "fingerprint"}: whether the persistent cache
     #       (repro.core.tunecache) answered, and how many execution

@@ -55,11 +55,14 @@ __all__ = [
 
 # Bump whenever predict_cost / offload_cost_terms semantics change: every
 # cached table and every fitted calibration is invalidated by the bump.
-# v1 was the PR-3 tuner (no cache); v2 adds dominance pruning + hw= pricing.
-COST_MODEL_VERSION = 2
+# v1 was the PR-3 tuner (no cache); v2 adds dominance pruning + hw= pricing;
+# v3 adds the kernel-variant axis and the two-level (PCIe + HBM) roofline.
+COST_MODEL_VERSION = 3
 
 _ENV_VAR = "REPRO_TUNE_CACHE"
+_MAX_ENV_VAR = "REPRO_TUNE_CACHE_MAX"
 _DISABLED = ("", "0", "off", "none")
+_DEFAULT_MAX_ENTRIES = 256
 
 
 def _sha(obj: Any) -> str:
@@ -100,7 +103,8 @@ def program_fingerprint(program) -> str:
     obj = {
         "name": program.name,
         "blocks": [[b.idx, b.kind.value, b.name, list(b.reads),
-                    list(b.writes), list(b.loop_path), _code_key(b.fn)]
+                    list(b.writes), list(b.loop_path), _code_key(b.fn),
+                    getattr(b, "kernel", None)]
                    for b in program.blocks],
         "loops": [[lid, info.n_iters, list(info.parent_path)]
                   for lid, info in sorted(program.loops.items())],
@@ -156,9 +160,22 @@ def calibration_fingerprint(hw: Dict[str, float]) -> str:
 class TuneCache:
     """One JSON file per slot under ``path``; lookups validate the
     stored fingerprint and evict on mismatch (stale-entry invalidation).
-    Writes are atomic (tempfile + rename)."""
+    Writes are atomic (tempfile + rename).
 
-    def __init__(self, path: Optional[Any] = None):
+    The cache is bounded: past ``max_entries`` slot files (default 256,
+    or ``REPRO_TUNE_CACHE_MAX``), ``store`` evicts the least-recently
+    used entries by file mtime — lookups touch their entry so a hot slot
+    survives a cold sweep.  ``max_entries <= 0`` disables eviction."""
+
+    def __init__(self, path: Optional[Any] = None,
+                 max_entries: Optional[int] = None):
+        if max_entries is None:
+            try:
+                max_entries = int(os.environ.get(
+                    _MAX_ENV_VAR, _DEFAULT_MAX_ENTRIES))
+            except ValueError:
+                max_entries = _DEFAULT_MAX_ENTRIES
+        self.max_entries = max_entries
         if path is None:
             env = os.environ.get(_ENV_VAR)
             # a disable sentinel is not a directory name: a direct
@@ -193,6 +210,10 @@ class TuneCache:
             except OSError:
                 pass
             return None
+        try:
+            os.utime(fp_path)  # LRU recency: a hit keeps the entry warm
+        except OSError:
+            pass
         return entry.get("payload")
 
     def store(self, slot: str, fingerprint: str, payload: Dict) -> None:
@@ -211,6 +232,39 @@ class TuneCache:
             except OSError:
                 pass
             raise
+        self._evict_lru(keep=self._slot_path(slot))
+
+    def _evict_lru(self, keep: Optional[pathlib.Path] = None) -> None:
+        """Delete oldest-mtime entries until at most ``max_entries``
+        remain.  The just-written slot (``keep``) is never evicted even
+        when the cap is smaller than one."""
+        if self.max_entries is None or self.max_entries <= 0:
+            return
+        try:
+            files = list(self.path.glob("*.json"))
+        except OSError:
+            return
+        if len(files) <= self.max_entries:
+            return
+
+        def _mtime(f: pathlib.Path) -> float:
+            try:
+                return f.stat().st_mtime
+            except OSError:
+                return float("inf")  # vanished: skip, don't evict for it
+
+        files.sort(key=_mtime)
+        excess = len(files) - self.max_entries
+        for f in files:
+            if excess <= 0:
+                break
+            if keep is not None and f == keep:
+                continue
+            try:
+                f.unlink()
+            except OSError:
+                pass
+            excess -= 1
 
     # -- fitted calibration constants ---------------------------------------
     def load_calibration(self, backend_key: str,

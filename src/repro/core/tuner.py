@@ -10,6 +10,11 @@ paper explores —
     transfer streams     1–4 logical upload/download queues
     loop fusion          whole-loop ``lax.fori_loop`` lowering on/off
     buffer donation      fused launches donate rewritten inputs on/off
+    kernel variants      per-Pallas-kernel tile/block sizes (ISSUE 6):
+                         each kernel-tagged block's registry grid
+                         (``repro.kernels.variants``), priced by a
+                         per-kernel roofline cutout so ``kernel_s``
+                         differs across tile candidates
 
 — rank them with a static cost model that reuses the roofline machinery
 (``repro.roofline.analysis``: per-block HLO dot-FLOPs, PCIe/HBM
@@ -56,8 +61,8 @@ import itertools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..roofline.analysis import (HW, dot_flops, fit_offload_constants,
-                                 offload_cost_terms, parse_hlo,
-                                 rank_correlation)
+                                 kernel_roofline_terms, offload_cost_terms,
+                                 parse_hlo, rank_correlation)
 from .analysis import ProgramAnalysis, analyze
 from .backend import Backend, JaxDeviceBackend, get_backend
 from .ir import (AdvancedLoad, BlockKind, DelegateStore, Plan, Program,
@@ -69,6 +74,10 @@ from .tunecache import (TuneCache, backend_fingerprint, default_cache,
 __all__ = ["PlanConfig", "enumerate_configs", "predict_cost", "tune",
            "winner_exec_kwargs"]
 
+# one kernel's tile choice: (kernel_name, ((param, value), ...)) — the
+# params half is KernelVariant.params (canonical sorted pairs)
+KernelChoice = Tuple[str, Tuple[Tuple[str, int], ...]]
+
 
 @dataclasses.dataclass(frozen=True)
 class PlanConfig:
@@ -77,15 +86,47 @@ class PlanConfig:
     n_streams: int = 2
     fuse_loops: bool = True
     donate: bool = False
+    # per-kernel tile choice, sorted by kernel name; () = registry
+    # defaults (also the only value for kernel-free programs, keeping
+    # labels/fingerprints of the pre-kernel-axis grid unchanged)
+    kernel_variants: Tuple[KernelChoice, ...] = ()
 
     @property
     def label(self) -> str:
-        return (f"{self.policy}/streams{self.n_streams}"
+        base = (f"{self.policy}/streams{self.n_streams}"
                 f"/{'fuse' if self.fuse_loops else 'nofuse'}"
                 f"/{'donate' if self.donate else 'nodonate'}")
+        if self.kernel_variants:
+            kv = "+".join(
+                f"{k}[{','.join(f'{n}={v}' for n, v in params)}]"
+                for k, params in self.kernel_variants)
+            base += "/" + kv
+        return base
 
     def as_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        # JSON-stable form: a cache-hit table must compare equal to the
+        # fresh run that stored it, so serialize the variant tuples the
+        # way json will echo them back (nested lists)
+        d["kernel_variants"] = [[k, [list(p) for p in params]]
+                                for k, params in self.kernel_variants]
+        return d
+
+    def variants_map(self) -> Dict[str, Dict[str, int]]:
+        """{kernel: {param: value}} view (what ``execute`` consumes)."""
+        return {k: dict(params) for k, params in self.kernel_variants}
+
+
+def _cfg_from_dict(d: Dict[str, Any]) -> PlanConfig:
+    """Rebuild a PlanConfig from ``as_dict()`` output, including after a
+    JSON round-trip (which turns the kernel_variants tuples into lists —
+    unhashable in a frozen dataclass)."""
+    d = dict(d)
+    kv = d.get("kernel_variants") or ()
+    d["kernel_variants"] = tuple(
+        (str(k), tuple((str(n), int(v)) for n, v in params))
+        for k, params in kv)
+    return PlanConfig(**d)
 
 
 DEFAULT_POLICIES: Tuple[str, ...] = ("naive", "optimized", "grouped")
@@ -119,10 +160,15 @@ def enumerate_configs(policies: Sequence[str] = DEFAULT_POLICIES,
 def _block_flops(program: Program,
                  shapes: Dict[str, Any]) -> Dict[int, float]:
     """Per-offload-block FLOPs via the roofline HLO machinery: lower each
-    block body once, parse the optimized HLO, count dot FLOPs.  Falls
-    back to 0 for bodies that fail to lower (the cost model then ranks
-    on transfer + dispatch terms alone, which are the plan-dependent
-    ones anyway)."""
+    block BODY in isolation, parse its optimized HLO, count dot FLOPs —
+    so every block is priced with its OWN flops, never the whole
+    program's (pricing each block with program-level dot flops would
+    double-count kernel_s across blocks).  Kernel-tagged blocks are
+    skipped (0.0): they are priced analytically per tile variant via
+    ``kernel_roofline_terms``, and lowering a Pallas call in interpret
+    mode is both slow and uncountable here.  Falls back to 0 for bodies
+    that fail to lower (the cost model then ranks on transfer + dispatch
+    terms alone, which are the plan-dependent ones anyway)."""
     out: Dict[int, float] = {}
     try:
         import jax
@@ -130,6 +176,9 @@ def _block_flops(program: Program,
     except Exception:            # pragma: no cover - jax is baked in
         return {b.idx: 0.0 for b in program.offload_blocks()}
     for blk in program.offload_blocks():
+        if blk.kernel:
+            out[blk.idx] = 0.0
+            continue
         avals = [shapes[v] for v in blk.reads]
 
         def wrapped(*arrays, _blk=blk):
@@ -144,9 +193,31 @@ def _block_flops(program: Program,
     return out
 
 
+def _kernel_block_terms(blk, params, shapes,
+                        hw) -> Optional[Dict[str, float]]:
+    """Analytic (flops, kernel_bytes) for a kernel-tagged block priced at
+    tile choice ``params`` (None → the registry defaults) on the block's
+    declared-read operand shapes.  None when the registry cannot price it
+    (unknown kernel, missing shapes, invalid tile) — the caller then
+    falls back to the generic HLO/nbytes pricing."""
+    import numpy as np
+    try:
+        sds = [shapes[v] for v in blk.reads]
+        op_shapes = [tuple(s.shape) for s in sds]
+        itemsizes = [int(np.dtype(s.dtype).itemsize) for s in sds]
+        if params is None:
+            from repro.kernels.variants import KERNELS
+            params = KERNELS[blk.kernel]["defaults"]
+        return kernel_roofline_terms(blk.kernel, dict(params), op_shapes,
+                                     itemsizes, hw=hw)
+    except Exception:
+        return None
+
+
 def predict_cost(pl: Plan, cfg: PlanConfig,
                  block_flops: Optional[Dict[int, float]] = None,
-                 hw: Optional[Dict[str, float]] = None) -> Dict[str, Any]:
+                 hw: Optional[Dict[str, float]] = None,
+                 shapes: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Walk the plan with loop-trip multipliers and price it:
 
     * transfer bytes  — Σ nbytes(var) × trip multiplier per load/store,
@@ -154,18 +225,24 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
       transfers, but a fusable pure-device loop nest counts ONCE per
       entry when ``cfg.fuse_loops`` (the whole-loop lowering's
       amortization, mirroring the compiler's structural eligibility),
-    * kernel terms    — logical block launches × per-block HLO FLOPs and
-      touched bytes (plan-invariant; keeps predictions in real units).
+    * kernel terms    — logical block launches × per-block flops and
+      touched bytes.  A kernel-tagged block is priced analytically per
+      tile variant (``cfg.kernel_variants`` via
+      ``kernel_roofline_terms``, needs ``shapes``) so kernel_s differs
+      across kernel-axis candidates; other blocks use their own HLO dot
+      FLOPs (``block_flops``) + env nbytes.
 
     ``hw`` overrides the pricing constants (the tuner passes the
-    calibrated set when one is cached for the backend).  Returns the
-    counters plus ``offload_cost_terms`` (transfer_s / dispatch_s /
-    kernel_s / predicted_s).
+    calibrated set when one is cached for the backend); ``shapes`` is
+    the analyzer's var → ShapeDtypeStruct map.  Returns the counters
+    plus ``offload_cost_terms`` (transfer_s / dispatch_s / kernel_s /
+    predicted_s).
     """
     from .compile import fusable_loops
     program = pl.program
     nb = pl.meta.get("var_nbytes", {})
     flops_of = block_flops or {}
+    kv_map = cfg.variants_map()
     pure = fusable_loops(pl) if cfg.fuse_loops else set()
 
     h2d_bytes = d2h_bytes = 0
@@ -207,9 +284,17 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
             kernel_launches += m
             if fused_depth == 0:
                 dispatches += m
-            flops += flops_of.get(blk.idx, 0.0) * m
-            touched = set(blk.effective_reads()) | set(blk.writes)
-            kernel_bytes += sum(nb.get(v, 0) for v in touched) * m
+            kterms = None
+            if blk.kernel and shapes is not None:
+                kterms = _kernel_block_terms(blk, kv_map.get(blk.kernel),
+                                             shapes, hw)
+            if kterms is not None:
+                flops += kterms["flops"] * m
+                kernel_bytes += kterms["kernel_bytes"] * m
+            else:
+                flops += flops_of.get(blk.idx, 0.0) * m
+                touched = set(blk.effective_reads()) | set(blk.writes)
+                kernel_bytes += sum(nb.get(v, 0) for v in touched) * m
         elif op.kind == "directive":
             d = op.directive
             m = mult()
@@ -256,8 +341,10 @@ def _measure(pl: Plan, cfg: PlanConfig, be: Backend, reps: int) -> float:
     from .executor import execute
     # measure on a physically matching backend: cfg.n_streams real
     # queues (streams 3/4 must not fold onto a 2-queue instance) and
-    # the candidate's donation flag
+    # the candidate's donation flag — launching the candidate's kernel
+    # tile sizes
     kw = dict(mode="compiled", fuse_loops=cfg.fuse_loops,
+              kernel_variants=cfg.variants_map() or None,
               backend=be.variant(n_streams=cfg.n_streams,
                                  donate=cfg.donate))
     execute(pl, **kw)                       # warm jits + plan lowering
@@ -270,14 +357,15 @@ def _measure(pl: Plan, cfg: PlanConfig, be: Backend, reps: int) -> float:
 
 def winner_exec_kwargs(pl: Plan, backend: Any = None) -> Dict[str, Any]:
     """``execute()`` kwargs that honor a tuned plan's chosen variant:
-    compiled mode with the winner's fusion flag, on a donate-enabled
-    twin of ``backend`` when the winner wants donation.  Without this a
-    caller re-running the winner on the plain backend measures the
-    nodonate timing under a donate label."""
+    compiled mode with the winner's fusion flag and kernel tile sizes,
+    on a donate-enabled twin of ``backend`` when the winner wants
+    donation.  Without this a caller re-running the winner on the plain
+    backend measures the nodonate timing under a donate label."""
     be = _donation_variant(get_backend(backend),
                            bool(pl.meta.get("donate")))
     return dict(mode="compiled",
                 fuse_loops=bool(pl.meta.get("fuse_loops", True)),
+                kernel_variants=pl.meta.get("kernel_variants") or None,
                 backend=be)
 
 
@@ -332,16 +420,48 @@ def _cached_plan(program: Program, an: ProgramAnalysis, tuning: Dict,
     verbatim (identical to the fresh run that stored it)."""
     chosen = next(c for c in tuning["candidates"]
                   if c["label"] == tuning["chosen"])
-    cfg = PlanConfig(**chosen["config"])
+    cfg = _cfg_from_dict(chosen["config"])
     pl = Pipeline.default(cfg.policy, n_streams=cfg.n_streams
                           ).run(program, analysis=an)
     pl.meta["tuning"] = tuning
     pl.meta["fuse_loops"] = cfg.fuse_loops
     pl.meta["donate"] = cfg.donate
+    pl.meta["kernel_variants"] = cfg.variants_map()
     pl.meta["optimize"] = cfg.policy != "naive"
     pl.meta["tuning_cache"] = {"hit": True, "measurements": 0,
                                "path": str(tc.path), "fingerprint": fp}
     return pl
+
+
+def _kernel_variant_combos(program: Program,
+                           an: ProgramAnalysis) -> List[Tuple]:
+    """The kernel axis of the grid: the cross product of tile variants
+    over the program's kernel-tagged blocks (blocks sharing a kernel name
+    share the choice).  ``[()]`` for kernel-free programs, keeping their
+    grid exactly the pre-kernel-axis one."""
+    import numpy as np
+    kernels: Dict[str, Any] = {}
+    for blk in program.offload_blocks():
+        if blk.kernel and blk.kernel not in kernels:
+            kernels[blk.kernel] = blk
+    if not kernels:
+        return [()]
+    from repro.kernels.variants import variants_for
+    per_kernel = []
+    for name in sorted(kernels):
+        blk = kernels[name]
+        try:
+            sds = [an.shapes[v] for v in blk.reads]
+            shapes = [tuple(s.shape) for s in sds]
+            itemsizes = [int(np.dtype(s.dtype).itemsize) for s in sds]
+            vs = variants_for(name, shapes, itemsizes)
+        except Exception:
+            vs = ()
+        if vs:
+            per_kernel.append([(name, v.params) for v in vs])
+    if not per_kernel:
+        return [()]
+    return [tuple(combo) for combo in itertools.product(*per_kernel)]
 
 
 def tune(program: Program, *, backend: Any = None,
@@ -400,6 +520,19 @@ def tune(program: Program, *, backend: Any = None,
     if not cfg_list:
         raise ValueError("tune() needs at least one candidate config")
 
+    # -- kernel axis: cross the grid with per-kernel tile variants ----------
+    combos = _kernel_variant_combos(program, an)
+    if combos != [()]:
+        expanded: List[PlanConfig] = []
+        for cfg in cfg_list:
+            if cfg.kernel_variants:
+                expanded.append(cfg)       # caller pinned a tile choice
+            else:
+                expanded.extend(
+                    dataclasses.replace(cfg, kernel_variants=c)
+                    for c in combos)
+        cfg_list = expanded
+
     # -- cache lookup (measured tables only) --------------------------------
     tc = _resolve_cache(cache) if measure else None
     fp = slot = None
@@ -431,6 +564,9 @@ def tune(program: Program, *, backend: Any = None,
     records: List[Dict[str, Any]] = []
     plans: Dict[str, Plan] = {}
     classes: Dict[Tuple, Dict[str, Any]] = {}
+    # the pipeline is deterministic in (policy, n_streams): kernel-axis
+    # expansion re-visits each placement many times, so memoize the runs
+    pipe_cache: Dict[Tuple[str, int], Plan] = {}
 
     for cfg in cfg_list:
         base = {"label": cfg.label, "config": cfg.as_dict(),
@@ -438,25 +574,33 @@ def tune(program: Program, *, backend: Any = None,
                 "error": None, "measured_s": None, "calibrated_s": None,
                 "rank": None}
         try:
-            pl = Pipeline.default(cfg.policy, n_streams=cfg.n_streams
-                                  ).run(program, analysis=an)
+            pipe_key = (cfg.policy, cfg.n_streams)
+            pl = pipe_cache.get(pipe_key)
+            if pl is None:
+                pl = Pipeline.default(cfg.policy, n_streams=cfg.n_streams
+                                      ).run(program, analysis=an)
+                pipe_cache[pipe_key] = pl
         except (RuntimeError, ValueError) as e:
             base.update(valid=False, error=str(e))
             records.append(base)
             continue
         # execution class: the ops tuple itself (frozen dataclasses —
-        # exact, unlike its hash) + the flags as the EXECUTOR sees them.
-        # fuse without fusable loops, or donate on a backend without
-        # donation, cannot change execution: such configs merge here
-        # instead of being measured separately (dominance pruning).
+        # exact, unlike its hash) + the flags as the EXECUTOR sees them
+        # + the kernel tile choice (already canonical: clamped/deduped by
+        # the registry, so declared tiles that launch identically merged
+        # during enumeration).  fuse without fusable loops, or donate on
+        # a backend without donation, cannot change execution: such
+        # configs merge here instead of being measured separately
+        # (dominance pruning).
         eff_fuse = cfg.fuse_loops and bool(fusable_loops(pl))
         eff_donate = cfg.donate and be.supports_donation
-        key = (tuple(pl.ops), eff_fuse, eff_donate)
+        key = (tuple(pl.ops), eff_fuse, eff_donate, cfg.kernel_variants)
         survivor = classes.get(key)
         if survivor is None:
             if flops_cache is None:
                 flops_cache = _block_flops(program, an.shapes)
-            base.update(predict_cost(pl, cfg, flops_cache, hw=pricing_hw))
+            base.update(predict_cost(pl, cfg, flops_cache, hw=pricing_hw,
+                                     shapes=an.shapes))
             classes[key] = base
             plans[cfg.label] = pl
         else:
@@ -481,7 +625,7 @@ def tune(program: Program, *, backend: Any = None,
         to_measure = (survivors if top_k is None
                       else survivors[:max(1, top_k)])
         for r in to_measure:
-            cfg = PlanConfig(**r["config"])
+            cfg = _cfg_from_dict(r["config"])
             r["measured_s"] = _measure(plans[r["label"]], cfg, be, reps)
             n_measured += 1
 
@@ -508,16 +652,19 @@ def tune(program: Program, *, backend: Any = None,
     chosen = (min(measured, key=lambda r: (r["measured_s"], r["rank"]))
               if measured else valid[0])
 
+    chosen_cfg = _cfg_from_dict(chosen["config"])
     best = plans[chosen["alias_of"] or chosen["label"]]
     best.meta["tuning"] = {
         "chosen": chosen["label"],
         "backend": be.name,
         "hw": {k: pricing_hw[k] for k in _HW_KEYS},
         "calibration": calibration,
+        "kernel_variants": chosen_cfg.variants_map(),
         "candidates": valid + [r for r in records if not r["valid"]],
     }
     best.meta["fuse_loops"] = chosen["config"]["fuse_loops"]
     best.meta["donate"] = chosen["config"]["donate"]
+    best.meta["kernel_variants"] = chosen_cfg.variants_map()
     best.meta["optimize"] = chosen["config"]["policy"] != "naive"
     best.meta["tuning_cache"] = {
         "hit": False, "measurements": n_measured,

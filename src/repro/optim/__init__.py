@@ -1,9 +1,9 @@
 """Optimizers: AdamW, Adafactor, host-offloaded state (paper technique)."""
 from .adafactor import adafactor
 from .adamw import Optimizer, adamw
-from .offload import (host_memory_kind, offload_shardings,
-                      offloaded_optimizer, plan_step_program,
-                      supports_pinned_host)
+from .offload import (attention_step_program, host_memory_kind,
+                      offload_shardings, offloaded_optimizer,
+                      plan_step_program, supports_pinned_host)
 
 
 def default_optimizer(cfg) -> Optimizer:
@@ -17,5 +17,5 @@ def default_optimizer(cfg) -> Optimizer:
 
 __all__ = ["adamw", "adafactor", "Optimizer", "default_optimizer",
            "offload_shardings", "offloaded_optimizer",
-           "plan_step_program", "host_memory_kind",
-           "supports_pinned_host"]
+           "plan_step_program", "attention_step_program",
+           "host_memory_kind", "supports_pinned_host"]

@@ -32,7 +32,8 @@ import jax
 from repro.core import Program
 
 __all__ = ["offload_shardings", "offloaded_optimizer", "plan_step_program",
-           "host_memory_kind", "supports_pinned_host"]
+           "attention_step_program", "host_memory_kind",
+           "supports_pinned_host"]
 
 _HOST_KIND = "pinned_host"
 
@@ -133,4 +134,44 @@ def plan_step_program(n_steps: int = 4) -> Program:
     p.host(lambda xp, loss: {"final_loss": loss},
            reads=("loss",), writes=("final_loss",), name="log_metrics")
     p.set_outputs("final_loss", "w")
+    return p
+
+
+def attention_step_program(n_steps: int = 2) -> Program:
+    """A flash-attention train step as a block program with a *tagged*
+    Pallas kernel block: the ``kernel="flash_attention"`` tag lets the
+    plan-space tuner enumerate tile variants (``block_q``/``block_k``)
+    for the attention launch and price them with the two-level roofline,
+    alongside the usual policy/stream/fuse axes.  Shapes are kept small
+    (S = T = 128) so interpret-mode Pallas stays fast on CPU CI while
+    the clamped tile grid still yields >= 3 distinct variants."""
+    import numpy as np
+
+    from repro.kernels import ops
+
+    B, S, T, K, G, D = 1, 128, 128, 1, 1, 8
+    rng = np.random.default_rng(0)
+    p = Program("attention_step")
+    p.bind("q", rng.standard_normal((B, S, K, G, D)).astype(np.float32))
+    p.bind("k", rng.standard_normal((B, T, K, D)).astype(np.float32))
+    p.bind("v", rng.standard_normal((B, T, K, D)).astype(np.float32))
+    p.bind("gain", np.ones((1,), np.float32))
+
+    p.host(lambda xp, gain: {"g": gain * 1.001},
+           reads=("gain",), writes=("g",), name="next_gain")
+    with p.loop(n_steps):
+        # reads are the kernel's ops-layer operands, in operand order —
+        # the tuner resolves the variant grid from their shapes
+        p.offload(lambda xp, q, k, v, *, block_q=128, block_k=128:
+                  {"o": ops.flash_attention(q, k, v, causal=True,
+                                            block_q=block_q,
+                                            block_k=block_k)},
+                  reads=("q", "k", "v"), writes=("o",),
+                  name="attention", kernel="flash_attention")
+        p.offload(lambda xp, o, g:
+                  {"loss": (o * o).sum().reshape(1) * g},
+                  reads=("o", "g"), writes=("loss",), name="reduce")
+    p.host(lambda xp, loss: {"final_loss": loss},
+           reads=("loss",), writes=("final_loss",), name="log_metrics")
+    p.set_outputs("final_loss",)
     return p

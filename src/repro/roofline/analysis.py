@@ -27,7 +27,7 @@ from typing import Dict, List, Optional, Tuple
 
 __all__ = ["HW", "CALIBRATABLE", "parse_hlo", "collective_bytes",
            "dot_flops", "analytic_model_flops", "analytic_hbm_bytes",
-           "roofline_terms", "offload_cost_terms",
+           "roofline_terms", "offload_cost_terms", "kernel_roofline_terms",
            "fit_offload_constants", "rank_correlation"]
 
 HW = {
@@ -353,9 +353,10 @@ def offload_cost_terms(h2d_bytes: float, d2h_bytes: float,
     ``predicted_s`` sums the three: transfers on this machine are NOT
     overlapped with the modelled kernel time (the plan's async streams
     overlap them with *host* work), so a sum — not a max — ranks
-    correctly; what matters for the tuner is the ordering, which the
-    transfer and dispatch terms dominate across candidate plans of the
-    same program (kernel_s is plan-invariant)."""
+    correctly.  Since the kernel tuning axis (ISSUE 6), ``kernel_s`` is
+    no longer plan-invariant: kernel-tagged blocks are priced per tile
+    variant via ``kernel_roofline_terms``, so the HBM/flops legs of the
+    roofline carry cross-candidate signal too."""
     h = hw or HW
     transfer_s = (h2d_bytes + d2h_bytes) / h["pcie_bw"]
     dispatch_s = (h["launch_overhead_s"] * dispatches
@@ -370,59 +371,146 @@ def offload_cost_terms(h2d_bytes: float, d2h_bytes: float,
     }
 
 
+def kernel_roofline_terms(kernel: str, variant, shapes,
+                          itemsizes=(),
+                          hw: Optional[Dict[str, float]] = None
+                          ) -> Dict[str, float]:
+    """Per-kernel roofline cutout: analytic MXU flops + HBM bytes touched
+    for one grid sweep of ``kernel`` launched with the tile parameters in
+    ``variant`` (a dict or ``((name, value), ...)`` tuple) on operand
+    ``shapes`` — the second level of the two-level (PCIe + HBM) roofline.
+    Bytes follow the variant's tile revisit structure, so ``kernel_s``
+    genuinely differs across tile candidates."""
+    # repro.kernels.__init__ imports jax; the registry module itself is
+    # stdlib-only, so pull it in directly (and lazily).
+    from repro.kernels import variants as _kv
+    h = hw or HW
+    params = dict(variant)
+    flops, kbytes = _kv.kernel_roofline(kernel, params, shapes, itemsizes)
+    return {
+        "flops": float(flops),
+        "kernel_bytes": float(kbytes),
+        "kernel_s": max(flops / h["peak_flops_bf16"], kbytes / h["hbm_bw"]),
+    }
+
+
 # The offload-cost constants a measured tuning table can re-fit (the
 # OpenMP-Advisor observation: calibrated beats fixed for offload
-# decisions).  peak_flops/hbm_bw stay fixed — kernel_s is plan-invariant,
-# so the measured table carries no signal about them.
-CALIBRATABLE = ("pcie_bw", "launch_overhead_s", "sync_overhead_s")
+# decisions).  Since the kernel tuning axis (ISSUE 6), tile variants make
+# kernel_s vary across candidates, so the HBM/flops roofline legs are
+# identifiable too and join the fit.
+CALIBRATABLE = ("pcie_bw", "launch_overhead_s", "sync_overhead_s",
+                "hbm_bw", "peak_flops_bf16")
 
-# clamp ranges keeping a degenerate fit physical: bandwidth within
-# [100 MB/s, 100 TB/s], per-event overheads within [0, 100 ms]
+# clamp ranges keeping a degenerate fit physical: bandwidths within
+# [100 MB/s, 100 TB/s], per-event overheads within [0, 100 ms],
+# peak compute within [1 GFLOP/s, 1 EFLOP/s]
 _FIT_BOUNDS = {
     "pcie_bw": (1e8, 1e14),
     "launch_overhead_s": (0.0, 0.1),
     "sync_overhead_s": (0.0, 0.1),
+    "hbm_bw": (1e8, 1e14),
+    "peak_flops_bf16": (1e9, 1e18),
 }
 
+# design-matrix column order for the joint fit
+_FIT_COLS = ("pcie", "dispatches", "syncs", "flops", "kbytes")
 
-def fit_offload_constants(rows, hw: Optional[Dict[str, float]] = None
-                          ) -> Optional[Dict[str, float]]:
-    """Least-squares fit of the CALIBRATABLE constants from a measured
-    tuning table.
 
-    ``rows`` are candidate records carrying the ``predict_cost``
-    decomposition (``h2d_bytes``/``d2h_bytes``/``dispatches``/``syncs``/
-    ``kernel_s``) plus ``measured_s``.  The model is exactly
-    ``offload_cost_terms``:
-
-        measured − kernel_s ≈ bytes/pcie_bw + launch·dispatches
-                              + sync·syncs
-
-    which is linear in (1/pcie_bw, launch, sync), so one ``lstsq`` on the
-    (scaled) design matrix recovers them.  Needs ≥ 3 measured rows (three
-    unknowns); returns None when under-determined.  Fitted values are
-    clamped to physical ranges; a non-positive bandwidth coefficient
-    falls back to the incoming default."""
+def _lstsq_cols(cols, y):
+    """Scaled least squares over the non-degenerate columns.  Returns
+    ({col_name: coefficient}, residual) or None when the system is
+    under-determined (fewer rows than active columns)."""
     import numpy as np
-    h = dict(hw or HW)
-    rows = [r for r in rows if r.get("measured_s") is not None]
-    if len(rows) < 3:
+    active = [n for n in _FIT_COLS if cols[n].any()]
+    if not active or len(y) < len(active):
         return None
-    X = np.array([[r["h2d_bytes"] + r["d2h_bytes"],
-                   r["dispatches"], r["syncs"]] for r in rows], float)
-    y = np.array([max(r["measured_s"] - r.get("kernel_s", 0.0), 0.0)
-                  for r in rows], float)
+    X = np.column_stack([cols[n] for n in active])
     scale = X.max(axis=0)
     scale[scale == 0] = 1.0
     try:
         coef, *_ = np.linalg.lstsq(X / scale, y, rcond=None)
     except np.linalg.LinAlgError:
         return None
-    inv_bw, launch, sync = (coef / scale).tolist()
+    coef = coef / scale
+    resid = float(np.square(X @ coef - y).sum())
+    return dict(zip(active, coef.tolist())), resid
+
+
+def fit_offload_constants(rows, hw: Optional[Dict[str, float]] = None
+                          ) -> Optional[Dict[str, float]]:
+    """Joint least-squares fit of the CALIBRATABLE constants from a
+    measured tuning table.
+
+    ``rows`` are candidate records carrying the ``predict_cost``
+    decomposition (``h2d_bytes``/``d2h_bytes``/``dispatches``/``syncs``/
+    ``flops``/``kernel_bytes``) plus ``measured_s``.  The model is exactly
+    ``offload_cost_terms``:
+
+        measured ≈ bytes/pcie_bw + launch·dispatches + sync·syncs
+                   + max(flops/peak, kernel_bytes/hbm_bw)
+
+    The max() makes this piecewise linear: a row is compute-bound when its
+    arithmetic intensity (flops/kernel_bytes) exceeds the machine balance
+    peak/hbm_bw — which we are fitting.  But sorting rows by intensity
+    reduces the assignment to ONE threshold position, so we sweep every
+    split of the sorted rows, solve the then-linear system (flops column
+    active on the compute side, kernel_bytes on the memory side), and keep
+    the assignment with the lowest residual.  Columns that are identically
+    zero (e.g. no kernel-tagged blocks in the table) drop out and their
+    constants keep the incoming defaults.
+
+    Needs ≥ 3 measured rows and at least as many rows as active columns;
+    returns None when under-determined.  Fitted values are clamped to
+    physical ranges; non-positive rate coefficients fall back to the
+    incoming defaults."""
+    import numpy as np
+    h = dict(hw or HW)
+    rows = [r for r in rows if r.get("measured_s") is not None]
+    if len(rows) < 3:
+        return None
+    pcie = np.array([r["h2d_bytes"] + r["d2h_bytes"] for r in rows], float)
+    disp = np.array([r["dispatches"] for r in rows], float)
+    sync = np.array([r["syncs"] for r in rows], float)
+    flops = np.array([r.get("flops", 0.0) or 0.0 for r in rows], float)
+    kbytes = np.array([r.get("kernel_bytes", 0.0) or 0.0
+                       for r in rows], float)
+    y = np.array([r["measured_s"] for r in rows], float)
+
+    # arithmetic intensity; bytes-free compute rows pin to the compute
+    # side (+inf), flop-free rows to the memory side (-1)
+    ai = np.where(kbytes > 0, flops / np.maximum(kbytes, 1e-300),
+                  np.where(flops > 0, np.inf, -1.0))
+    order = np.argsort(-ai, kind="stable")    # descending intensity
+
+    best = None
+    for t in range(len(rows) + 1):
+        # first t rows (by descending intensity) are compute-bound
+        compute = np.zeros(len(rows), bool)
+        compute[order[:t]] = True
+        cols = {
+            "pcie": pcie, "dispatches": disp, "syncs": sync,
+            "flops": np.where(compute, flops, 0.0),
+            "kbytes": np.where(compute, 0.0, kbytes),
+        }
+        out = _lstsq_cols(cols, y)
+        if out is not None and (best is None or out[1] < best[1]):
+            best = out
+    if best is None:
+        return None
+    coef, _ = best
+
+    def _rate(col, default):
+        c = coef.get(col)
+        return 1.0 / c if c is not None and c > 0 else default
+
     fitted = {
-        "pcie_bw": 1.0 / inv_bw if inv_bw > 0 else h["pcie_bw"],
-        "launch_overhead_s": launch,
-        "sync_overhead_s": sync,
+        "pcie_bw": _rate("pcie", h["pcie_bw"]),
+        "launch_overhead_s": coef.get("dispatches",
+                                      h["launch_overhead_s"]),
+        "sync_overhead_s": coef.get("syncs", h["sync_overhead_s"]),
+        "peak_flops_bf16": _rate("flops", h["peak_flops_bf16"]),
+        "hbm_bw": _rate("kbytes", h["hbm_bw"]),
     }
     for k, (lo, hi) in _FIT_BOUNDS.items():
         fitted[k] = float(min(max(fitted[k], lo), hi))

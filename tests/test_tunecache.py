@@ -193,6 +193,74 @@ class TestInvalidation:
         assert pl.meta["tuning_cache"]["hit"] is False
         assert pl.meta["tuning_cache"]["measurements"] > 0
 
+    def test_kernel_tag_part_of_fingerprint(self):
+        """Tagging a block as a kernel changes how the tuner prices and
+        launches it — the fingerprint must miss."""
+        def make(kernel):
+            p = Program("ktag")
+            p.bind("x", np.ones((4, 4), np.float32))
+            p.offload(lambda xp, x: {"y": x * 2.0}, reads=("x",),
+                      writes=("y",), name="k", kernel=kernel)
+            p.host(lambda xp, y: {"o": y}, reads=("y",), writes=("o",),
+                   name="c")
+            p.set_outputs("o")
+            return p
+
+        assert program_fingerprint(make(None)) != \
+            program_fingerprint(make("rmsnorm"))
+        assert program_fingerprint(make("rmsnorm")) == \
+            program_fingerprint(make("rmsnorm"))
+
+
+class TestLRUEviction:
+    def _store_n(self, tc, n, fp="fp"):
+        for i in range(n):
+            tc.store(f"slot-{i:03d}", fp, {"i": i})
+
+    def test_store_evicts_oldest_past_cap(self, tmp_path):
+        tc = TuneCache(tmp_path / "lru", max_entries=4)
+        import os
+        for i in range(6):
+            tc.store(f"slot-{i:03d}", "fp", {"i": i})
+            # distinct mtimes even on coarse-grained filesystems
+            os.utime(tc._slot_path(f"slot-{i:03d}"), (i, i))
+        assert len(list(tc.path.glob("*.json"))) == 4
+        # the oldest two are gone; the newest survive
+        assert tc.lookup("slot-000", "fp") is None
+        assert tc.lookup("slot-001", "fp") is None
+        assert tc.lookup("slot-005", "fp") == {"i": 5}
+
+    def test_lookup_touches_entry_lru_not_fifo(self, tmp_path):
+        import os
+        tc = TuneCache(tmp_path / "lru2", max_entries=2)
+        tc.store("a", "fp", {"v": "a"})
+        os.utime(tc._slot_path("a"), (1, 1))
+        tc.store("b", "fp", {"v": "b"})
+        os.utime(tc._slot_path("b"), (2, 2))
+        assert tc.lookup("a", "fp") == {"v": "a"}   # touches a -> newest
+        tc.store("c", "fp", {"v": "c"})             # evicts b, not a
+        assert tc.lookup("a", "fp") == {"v": "a"}
+        assert tc.lookup("b", "fp") is None
+        assert tc.lookup("c", "fp") == {"v": "c"}
+
+    def test_just_written_entry_never_evicted(self, tmp_path):
+        tc = TuneCache(tmp_path / "lru3", max_entries=1)
+        self._store_n(tc, 3)
+        assert tc.lookup("slot-002", "fp") == {"i": 2}
+
+    def test_env_var_sets_cap(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_CACHE_MAX", "3")
+        tc = TuneCache(tmp_path / "lru4")
+        assert tc.max_entries == 3
+        monkeypatch.setenv("REPRO_TUNE_CACHE_MAX", "not-a-number")
+        assert TuneCache(tmp_path / "lru5").max_entries == \
+            tunecache_mod._DEFAULT_MAX_ENTRIES
+
+    def test_cap_zero_disables_eviction(self, tmp_path):
+        tc = TuneCache(tmp_path / "lru6", max_entries=0)
+        self._store_n(tc, 5)
+        assert len(list(tc.path.glob("*.json"))) == 5
+
 
 class TestDominancePruning:
     def test_donate_and_fuse_merge_on_numpy_loopfree(self):
@@ -318,6 +386,50 @@ class TestCalibration:
         rows = self._golden_rows()[:2]
         assert fit_offload_constants(rows) is None
         assert fit_offload_constants([]) is None
+
+    def test_joint_fit_separates_roofline_sides(self):
+        """The two-level fit recovers hbm_bw AND peak_flops_bf16 from a
+        table mixing compute-bound and memory-bound rows — the max() in
+        the model is resolved by the intensity-threshold sweep."""
+        true = {"pcie_bw": 12e9, "launch_overhead_s": 7e-6,
+                "sync_overhead_s": 3e-6, "hbm_bw": 2e11,
+                "peak_flops_bf16": 2e12}     # balance: 10 flop/byte
+        cases = [                            # (pcie, disp, sync, flops, kb)
+            (1e6, 2, 1, 5e9, 1e6), (4e6, 3, 2, 2e10, 4e6),
+            (2e6, 1, 1, 8e9, 2e5), (8e6, 4, 2, 1e7, 8e7),
+            (1e7, 2, 1, 2e7, 2e8), (5e5, 1, 0, 1e6, 5e7),
+            (3e6, 2, 1, 3e10, 6e6), (6e6, 3, 1, 4e7, 1.5e8),
+        ]
+        rows = []
+        for pb, d, s, f, kb in cases:
+            t = (pb / true["pcie_bw"] + d * true["launch_overhead_s"]
+                 + s * true["sync_overhead_s"]
+                 + max(f / true["peak_flops_bf16"], kb / true["hbm_bw"]))
+            rows.append({"h2d_bytes": pb, "d2h_bytes": 0.0,
+                         "dispatches": d, "syncs": s, "flops": f,
+                         "kernel_bytes": kb, "measured_s": t})
+        fitted = fit_offload_constants(rows)
+        for k, v in true.items():
+            assert fitted[k] == pytest.approx(v, rel=1e-6), k
+
+    def test_fit_without_kernel_columns_keeps_defaults(self):
+        """A table with no kernel terms (flops = kernel_bytes = 0 on
+        every row) drops those columns: hbm_bw / peak keep defaults."""
+        true = {"pcie_bw": 8e9, "launch_overhead_s": 5e-5,
+                "sync_overhead_s": 1e-5}
+        rows = []
+        for pb, d, s in [(1e6, 2, 1), (4e6, 3, 2), (2e6, 1, 1),
+                         (8e6, 4, 2)]:
+            t = (pb / true["pcie_bw"] + d * true["launch_overhead_s"]
+                 + s * true["sync_overhead_s"])
+            rows.append({"h2d_bytes": pb, "d2h_bytes": 0.0,
+                         "dispatches": d, "syncs": s, "flops": 0.0,
+                         "kernel_bytes": 0.0, "measured_s": t})
+        fitted = fit_offload_constants(rows)
+        for k, v in true.items():
+            assert fitted[k] == pytest.approx(v, rel=1e-6), k
+        assert fitted["hbm_bw"] == HW["hbm_bw"]
+        assert fitted["peak_flops_bf16"] == HW["peak_flops_bf16"]
 
     def test_rank_correlation_basics(self):
         assert rank_correlation([1, 2, 3], [10, 20, 30]) == pytest.approx(1)

@@ -387,3 +387,101 @@ class TestTunerKnobs:
                 PlanConfig(policy="naive", n_streams=1)]
         pl = tune(p, backend="numpy", configs=cfgs, reps=1)
         assert len(pl.meta["tuning"]["candidates"]) == 2
+
+
+class TestKernelAxis:
+    """ISSUE 6: the tuner's kernel tile/block axis.  The flash-attention
+    step program carries a kernel-tagged block, so the candidate grid
+    grows a per-kernel variant choice, priced by the two-level roofline
+    and re-executed through ``winner_exec_kwargs``."""
+
+    GRID = dict(policies=("optimized",), streams=(1,), fuse=(True,),
+                donate=(False,))
+
+    def _tuned(self, **kw):
+        from repro.optim import attention_step_program
+        p = attention_step_program(n_steps=1)
+        kw = dict(self.GRID, reps=1, **kw)
+        return p, plan(p, policy="auto", **kw)
+
+    def test_enumerates_at_least_three_variants(self):
+        p, pl = self._tuned(measure=False)
+        valid = [c for c in pl.meta["tuning"]["candidates"] if c["valid"]]
+        kvs = {json.dumps(c["config"]["kernel_variants"]) for c in valid}
+        assert len(kvs) >= 3
+        # every candidate's label names the tile it launches
+        assert all("flash_attention[" in c["label"] for c in valid)
+
+    def test_kernel_s_differs_across_tile_candidates(self):
+        """The tentpole property: kernel_s is no longer plan-invariant —
+        smaller q tiles re-read K/V more, so HBM bytes (and kernel_s)
+        differ across candidates of the same placement."""
+        p, pl = self._tuned(measure=False)
+        valid = [c for c in pl.meta["tuning"]["candidates"] if c["valid"]]
+        by_bq = {}
+        for c in valid:
+            bq = dict(dict(c["config"]["kernel_variants"])
+                      ["flash_attention"])["block_q"]
+            by_bq.setdefault(bq, c)
+        assert set(by_bq) == {64, 128}
+        assert by_bq[64]["kernel_bytes"] > by_bq[128]["kernel_bytes"]
+        assert by_bq[64]["kernel_s"] != by_bq[128]["kernel_s"]
+        assert by_bq[64]["flops"] == by_bq[128]["flops"]
+
+    def test_winner_variant_recorded_and_reexecuted(self):
+        from repro.core import winner_exec_kwargs
+        p, pl = self._tuned()
+        t = pl.meta["tuning"]
+        kv = t["kernel_variants"]
+        assert set(kv) == {"flash_attention"}
+        assert set(kv["flash_attention"]) == {"block_q", "block_k"}
+        assert pl.meta["kernel_variants"] == kv
+        assert kv["flash_attention"]["block_q"] in (64, 128)
+        # the chosen label names exactly the recorded variant
+        assert f"block_q={kv['flash_attention']['block_q']}" \
+            in t["chosen"]
+        kw = winner_exec_kwargs(pl)
+        assert kw["kernel_variants"] == kv
+        out, _ = execute(pl, dict(p.inputs), **kw)
+        # numerics are tile-invariant: another variant agrees
+        other = {"flash_attention": {"block_q": 64, "block_k": 64}}
+        out2, _ = execute(pl, dict(p.inputs), mode="compiled",
+                          kernel_variants=other, backend=kw["backend"])
+        np.testing.assert_allclose(np.asarray(out["final_loss"]),
+                                   np.asarray(out2["final_loss"]),
+                                   rtol=1e-5)
+
+    def test_dominance_pruning_keys_on_variant(self):
+        """Distinct tiles are distinct execution classes (measured
+        separately); identical launches merge."""
+        p, pl = self._tuned()
+        valid = [c for c in pl.meta["tuning"]["candidates"] if c["valid"]]
+        survivors = [c for c in valid if c["alias_of"] is None]
+        kvs = {json.dumps(c["config"]["kernel_variants"])
+               for c in survivors}
+        assert len(kvs) == len(survivors)
+        assert all(c["measured_s"] is not None for c in survivors)
+
+    def test_kernel_free_grid_and_labels_unchanged(self):
+        """Programs without kernel-tagged blocks keep the exact PR-5
+        grid: 48 candidates, no kernel suffix in any label, empty
+        variant maps."""
+        p, _ = build_3mm(n=16)
+        pl = plan(p, policy="auto", backend="numpy", measure=False)
+        valid = [c for c in pl.meta["tuning"]["candidates"] if c["valid"]]
+        assert len(valid) == 48
+        assert all("[" not in c["label"] for c in valid)
+        assert pl.meta["tuning"]["kernel_variants"] == {}
+
+    def test_cache_roundtrip_restores_variant(self, tmp_path):
+        from repro.core import TuneCache
+        from repro.optim import attention_step_program
+        tc = TuneCache(tmp_path / "kv")
+        p1 = attention_step_program(n_steps=1)
+        pl1 = tune(p1, reps=1, cache=tc, **self.GRID)
+        p2 = attention_step_program(n_steps=1)
+        pl2 = tune(p2, reps=1, cache=tc, **self.GRID)
+        assert pl2.meta["tuning_cache"]["hit"] is True
+        assert pl2.meta["tuning"] == pl1.meta["tuning"]
+        assert pl2.meta["kernel_variants"] == pl1.meta["kernel_variants"]
+        assert pl2.meta["kernel_variants"]

@@ -86,6 +86,7 @@ def compute_baseline() -> Dict[str, Dict]:
     default constants, no measurement, no cache, no calibration."""
     from directive_micro import n_kernel_variants
     from repro.core import tune
+    from repro.core.verify import verify_plan
     out = {}
     for name, prog in sorted(_gate_programs().items()):
         pl = tune(prog, backend="numpy", measure=False, cache=False,
@@ -97,6 +98,11 @@ def compute_baseline() -> Dict[str, Dict]:
             "predicted_s": top["predicted_s"],
             "n_valid": len(valid),
             "n_kernel_variants": n_kernel_variants(valid),
+            # the winning plan must pass the static verifier
+            # (repro.core.verify) — a cost-model change that promotes
+            # a racy/inconsistent candidate is a regression even if
+            # its predicted cost looks great
+            "verified": bool(verify_plan(pl).ok),
         }
     return out
 
@@ -159,7 +165,7 @@ def check(report_path: str = None) -> List[str]:
         problems.append(
             f"cost-model version drift: golden v{golden['cost_model_version']}"
             f" vs current v{COST_MODEL_VERSION} — regenerate the baseline "
-            f"(--update) alongside the version bump")
+            "(--update) alongside the version bump")
     current = compute_baseline()
     for name, want in sorted(golden["programs"].items()):
         got = current.get(name)
@@ -186,7 +192,12 @@ def check(report_path: str = None) -> List[str]:
                 f"{name}: enumerated kernel variants shrank "
                 f"{want['n_kernel_variants']} -> "
                 f"{got['n_kernel_variants']} — the kernel tile axis "
-                f"stopped being explored")
+                "stopped being explored")
+        if not got["verified"]:
+            problems.append(
+                f"{name}: tuned winner {got['predicted_winner']} no "
+                "longer passes the static plan verifier "
+                "(races / transfer consistency / donation safety)")
     if report_path:
         problems += _check_report(report_path, golden, tol)
     return problems

@@ -12,9 +12,6 @@ Output: ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
-import sys
-
-
 def main() -> None:
     print("name,us_per_call,derived")
 

@@ -19,7 +19,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core import execute, naive_plan, plan

@@ -10,8 +10,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import emit, execute, naive_plan, plan
-from repro.optim import plan_step_program
+from repro.core import emit, execute, naive_plan, plan  # noqa: E402
+from repro.optim import plan_step_program  # noqa: E402
 
 
 def main():
@@ -25,9 +25,9 @@ def main():
           f"{s_opt.d2h_transfers} downloads")
     print(f"naive:     {s_nv.h2d_transfers} uploads / "
           f"{s_nv.d2h_transfers} downloads")
-    print(f"\nthe residency win: weights + optimizer state stay on device "
+    print("\nthe residency win: weights + optimizer state stay on device "
           f"across all 6 steps ({s_nv.h2d_transfers - s_opt.h2d_transfers} "
-          f"uploads elided)")
+          "uploads elided)")
 
 
 if __name__ == "__main__":

@@ -8,10 +8,11 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import emit, execute, naive_plan, plan, run_host_oracle
-from repro.polybench import build
+import numpy as np        # noqa: E402
 
-import numpy as np
+from repro.core import (emit, execute, naive_plan, plan,  # noqa: E402
+                        run_host_oracle)
+from repro.polybench import build                         # noqa: E402
 
 
 def main():

@@ -10,9 +10,9 @@ import tempfile
 
 sys.path.insert(0, "src")
 
-from repro.configs import get_config, reduced
-from repro.launch.serve import serve
-from repro.launch.train import train
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.launch.serve import serve  # noqa: E402
+from repro.launch.train import train  # noqa: E402
 
 
 def main():

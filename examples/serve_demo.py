@@ -8,11 +8,11 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax
+import jax  # noqa: E402
 
-from repro.configs import get_config, reduced
-from repro.launch.serve import serve
-from repro.models import Transformer
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.launch.serve import serve  # noqa: E402
+from repro.models import Transformer  # noqa: E402
 
 
 def cache_report(cfg):

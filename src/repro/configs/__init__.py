@@ -1,10 +1,9 @@
 """Config registry: one module per assigned architecture (+ polybench)."""
-from .base import (ArchConfig, ShapeSpec, SHAPES, get_config, list_archs,
-                   param_count, active_param_count, reduced, register)
-
-from . import qwen2_5_14b, internlm2_20b, command_r_35b, nemotron4_15b, \
-    qwen3_moe_30b_a3b, arctic_480b, recurrentgemma_2b, musicgen_large, \
-    chameleon_34b, rwkv6_3b
+from . import (arctic_480b, chameleon_34b, command_r_35b, internlm2_20b,
+               musicgen_large, nemotron4_15b, qwen2_5_14b, qwen3_moe_30b_a3b,
+               recurrentgemma_2b, rwkv6_3b)
+from .base import (SHAPES, ArchConfig, ShapeSpec, active_param_count,
+                   get_config, list_archs, param_count, reduced, register)
 from .polybench import POLYBENCH_PROBLEMS
 
 ALL_ARCHS = (

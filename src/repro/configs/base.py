@@ -8,7 +8,7 @@ FULL configs are only ever lowered abstractly (ShapeDtypeStruct) by
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "register", "get_config",
            "list_archs", "reduced", "param_count"]
@@ -157,7 +157,6 @@ def param_count(cfg: ArchConfig) -> int:
             # in/out proj + conv + gates (x2 branch) + recurrence params
             total += 2 * d * d + cfg.rglru_conv_width * d + 2 * d * d + 2 * d
         elif kind == "rwkv":
-            h = d // cfg.rwkv_head_size
             # time-mix: r,k,v,w,g projections + output + lora + decay
             total += 5 * d * d + d * d + 6 * d + 2 * (d * 32 + 32 * d)
         # FFN

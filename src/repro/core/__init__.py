@@ -13,6 +13,8 @@ Public API:
     Backend et al.   — the execution backends (numpy / jax / pinned)
     run_host_oracle  — pure-host reference semantics
     emit             — HMPP-style generated source (paper Table 2)
+    verify_plan      — static race / transfer-consistency / donation-safety
+                       checker run at every plan boundary (hard error)
     DeviceResidency  — runtime residency tracker for the training substrates
 """
 from .analysis import ProgramAnalysis, analyze
@@ -32,6 +34,8 @@ from .tunecache import (COST_MODEL_VERSION, TuneCache, backend_fingerprint,
                         default_cache, program_fingerprint,
                         tuning_fingerprint)
 from .tuner import PlanConfig, predict_cost, tune, winner_exec_kwargs
+from .verify import (PlanVerificationError, VerifyReport, Violation,
+                     verify_plan)
 
 __all__ = [
     "Program", "Block", "BlockKind", "VarIO", "Plan", "PlanOp",
@@ -48,4 +52,5 @@ __all__ = [
     "PlanConfig", "predict_cost", "tune", "winner_exec_kwargs",
     "TuneCache", "COST_MODEL_VERSION", "default_cache",
     "program_fingerprint", "backend_fingerprint", "tuning_fingerprint",
+    "verify_plan", "VerifyReport", "Violation", "PlanVerificationError",
 ]

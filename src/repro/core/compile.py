@@ -43,13 +43,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .backend import Backend
-from .executor import (ExecStats, PlanExecutionError, _Slot, _nest,
-                       _run_block, do_load, do_release, do_store, do_sync,
+from .executor import (ExecStats, PlanExecutionError, _nest, _run_block,
+                       _Slot, do_load, do_release, do_store, do_sync,
                        dummy_arg, kernel_fn)
 from .ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, GroupDecl,
                  Plan, PlanOp, Program, Release, Synchronize)
@@ -422,7 +420,7 @@ class CompiledPlan:
                 if check:
                     raise PlanExecutionError(
                         f"fused loop reads {v!r}: not on device "
-                        f"(missing advancedload)")
+                        "(missing advancedload)")
                 slot.device = be.upload(slot.host)
                 slot.valid_device = True
             carry[v] = slot.device
@@ -486,7 +484,7 @@ class CompiledPlan:
                 if check:
                     raise PlanExecutionError(
                         f"compiled segment reads {v!r}: not on device "
-                        f"(missing advancedload)")
+                        "(missing advancedload)")
                 slot.device = be.upload(slot.host)
                 slot.valid_device = True
             args.append(slot.device)
@@ -518,14 +516,25 @@ class CompiledPlan:
 
 def compile_plan(p: Plan, backend: Backend, *,
                  fuse_loops: bool = True,
-                 kernel_variants=None) -> CompiledPlan:
+                 kernel_variants=None,
+                 verify: bool = False) -> CompiledPlan:
     """Lower ``p`` for ``backend``; segments are traced/compiled lazily on
     first call by the backend's compiler (``jax.jit`` caches thereafter).
     ``fuse_loops=False`` keeps eligible loops as per-iteration segment
     dispatches (the PR-1 behaviour) — useful for benchmarking the
     whole-loop lowering win in isolation.  ``kernel_variants`` binds tile
     parameters onto kernel-tagged blocks inside the traced bodies (see
-    ``execute``)."""
+    ``execute``).  ``verify=True`` statically vets the plan
+    (``repro.core.verify``) before lowering — donation safety is judged
+    against this backend's donation flag — and raises
+    ``PlanVerificationError`` instead of compiling a broken schedule."""
+    if verify:
+        from .verify import verify_plan
+        donating = (bool(getattr(backend, "supports_donation", False))
+                    and bool(getattr(backend, "donate", False)))
+        verify_plan(p, donate=donating,
+                    kernel_variants=kernel_variants or None,
+                    collect_lints=False).raise_if_failed()
     tree = _nest(p.ops, p.program)
     schedule = _lower(tree, p, backend, fuse_loops, kernel_variants)
     return CompiledPlan(plan=p, backend=backend, schedule=schedule)

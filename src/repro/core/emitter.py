@@ -49,11 +49,20 @@ def emit(plan: Plan) -> str:
         if chosen is not None:
             meas = ("" if chosen.get("measured_s") is None else
                     f", measured={chosen['measured_s'] * 1e3:.3f}ms")
-            w(f"#pragma omp2hmpp cost, "
+            w("#pragma omp2hmpp cost, "
               f"predicted={chosen['predicted_s'] * 1e3:.3f}ms"
               f" (transfer={chosen['transfer_s'] * 1e3:.3f}"
               f" + dispatch={chosen['dispatch_s'] * 1e3:.3f}"
               f" + kernel={chosen['kernel_s'] * 1e3:.3f}){meas}")
+        w("")
+
+    # static-verifier verdict (ISSUE 7): this source was vetted for
+    # races, transfer consistency and donation safety before emission
+    verdict = plan.meta.get("verify")
+    if verdict:
+        w(f"#pragma omp2hmpp verified, ok={str(verdict['ok']).lower()}, "
+          f"errors={verdict['n_errors']}, lints={verdict['n_lints']}, "
+          f"ops={verdict['checked_ops']}")
         w("")
 
     # codelet declarations (outlined kernels), paper Table 2 lines 1-27
@@ -82,9 +91,9 @@ def emit(plan: Plan) -> str:
             if op.loop_id in fused_loops:
                 # planner intent: the compiled path re-verifies the body
                 # structurally before actually fusing (see core.compile)
-                w(f"#pragma hmpp region, target=TPU  /* whole-loop "
+                w("#pragma hmpp region, target=TPU  /* whole-loop "
                   f"lowering: planner proved the {info.n_iters}-iteration "
-                  f"body device-pure; eligible for ONE fused launch */")
+                  "body device-pure; eligible for ONE fused launch */")
             w(f"for (int it{op.loop_id} = 0; it{op.loop_id} < "
               f"{info.n_iters}; ++it{op.loop_id}) {{")
             indent += 1
@@ -106,9 +115,9 @@ def emit(plan: Plan) -> str:
             elif isinstance(d, AdvancedLoad):
                 note = ""
                 if d.hoisted_from:
-                    note = (f"  /* hoisted out of loop(s) "
+                    note = ("  /* hoisted out of loop(s) "
                             f"{list(d.hoisted_from)} — ASAP after last "
-                            f"CPU write */")
+                            "CPU write */")
                 w(f"#pragma hmpp <group{d.group}> advancedload, "
                   f"args[{d.var}]"
                   + (", asynchronous" if d.asynchronous else "")
@@ -116,9 +125,9 @@ def emit(plan: Plan) -> str:
             elif isinstance(d, DelegateStore):
                 note = ""
                 if d.hoisted_from:
-                    note = (f"  /* sunk before loop(s) "
+                    note = ("  /* sunk before loop(s) "
                             f"{list(d.hoisted_from)} — ALAP before first "
-                            f"CPU read */")
+                            "CPU read */")
                 w(f"#pragma hmpp <group{d.group}> delegatedstore, "
                   f"args[{d.var}]"
                   + (f", stream={d.stream}" if d.stream else "") + note)

@@ -29,6 +29,7 @@ random programs through this).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Dict, List, Optional, Set, Tuple
 
@@ -36,14 +37,11 @@ import numpy as np
 
 from .backend import Backend, get_backend
 from .ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, GroupDecl,
-                 Plan, PlanOp, Program, Release, Synchronize)
+                 Plan, PlanExecutionError, PlanOp, Program, Release,
+                 Synchronize)
 
 __all__ = ["execute", "run_host_oracle", "ExecStats", "PlanExecutionError",
            "group_vars", "kernel_fn"]
-
-
-class PlanExecutionError(RuntimeError):
-    pass
 
 
 @dataclasses.dataclass
@@ -119,10 +117,19 @@ def kernel_fn(blk, variants: Optional[Dict[str, Dict[str, int]]] = None):
     return blk.fn
 
 
+def _verify_default() -> bool:
+    """``execute(..., verify=None)`` resolves through the ``REPRO_VERIFY``
+    env gate (CI sets it to 1 so every executed plan is statically vetted
+    first)."""
+    return os.environ.get("REPRO_VERIFY", "").strip().lower() in (
+        "1", "true", "on", "yes")
+
+
 def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
             *, check: bool = True, mode: str = "interpreted",
             backend: Any = None, fuse_loops: Optional[bool] = None,
-            kernel_variants: Optional[Dict[str, Dict[str, int]]] = None
+            kernel_variants: Optional[Dict[str, Dict[str, int]]] = None,
+            verify: Optional[bool] = None
             ) -> Tuple[Dict[str, np.ndarray], ExecStats]:
     """Run the plan; return (program outputs on host, stats).
 
@@ -143,6 +150,11 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
     (``meta["kernel_variants"]``, set by the tuner's winner), so a tuned
     plan launches the winning tile sizes by default.
 
+    ``verify`` runs the static plan verifier (``repro.core.verify``)
+    before executing and raises ``PlanVerificationError`` on any race /
+    transfer-consistency / donation-safety error; ``None`` follows the
+    ``REPRO_VERIFY=1`` environment gate (set in CI).
+
     One-time plan-lowering cost is reported as ``stats.compile_time`` and
     excluded from ``stats.wall_time``, so first-call and steady-state runs
     report comparable wall times.
@@ -155,6 +167,16 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
         kernel_variants = p.meta.get("kernel_variants")
     kernel_variants = _kv_norm(kernel_variants)
     be = get_backend(backend)
+    if verify is None:
+        verify = _verify_default()
+    if verify:
+        from .verify import verify_plan
+        donating = (mode == "compiled"
+                    and bool(getattr(be, "supports_donation", False))
+                    and bool(getattr(be, "donate", False)))
+        verify_plan(p, donate=donating,
+                    kernel_variants=kernel_variants or None,
+                    collect_lints=False).raise_if_failed()
     program = p.program
     env: Dict[str, _Slot] = {}
     stats = ExecStats()
@@ -201,7 +223,7 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
             if check:
                 raise PlanExecutionError(
                     f"output {name!r} not on host at program end "
-                    f"(missing delegatestore)")
+                    "(missing delegatestore)")
             slot.host = be.download(slot.device)
             slot.valid_host = True
         outs[name] = slot.host
@@ -359,7 +381,7 @@ def _run_block(program: Program, idx: int, env: Dict[str, _Slot],
                 if check:
                     raise PlanExecutionError(
                         f"codelet {blk.name!r} reads {v!r}: not on device "
-                        f"(missing advancedload)")
+                        "(missing advancedload)")
                 slot.device = be.upload(slot.host)
                 slot.valid_device = True
             args.append(slot.device)
@@ -384,7 +406,7 @@ def _run_block(program: Program, idx: int, env: Dict[str, _Slot],
                 if check:
                     raise PlanExecutionError(
                         f"host block {blk.name!r} reads {v!r}: not on host "
-                        f"(missing delegatestore)")
+                        "(missing delegatestore)")
                 slot.host = be.download(slot.device)
                 slot.valid_host = True
             kwargs[v] = slot.host

@@ -24,8 +24,16 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 __all__ = [
     "BlockKind", "VarIO", "Block", "LoopInfo", "Program",
     "Directive", "AdvancedLoad", "DelegateStore", "Callsite", "Synchronize",
-    "Release", "GroupDecl", "Plan", "PlanOp",
+    "Release", "GroupDecl", "Plan", "PlanOp", "PlanExecutionError",
 ]
+
+
+class PlanExecutionError(RuntimeError):
+    """A plan could not be executed (or, for the static-verifier subclass
+    ``repro.core.verify.PlanVerificationError``, was proven un-executable
+    before running).  Lives here rather than in ``executor`` so the
+    jax-free verifier can subclass it without importing the backend stack.
+    """
 
 
 class BlockKind(enum.Enum):
@@ -284,6 +292,10 @@ class Plan:
     #       {kernel_name: {param: value}}, e.g.
     #       {"flash_attention": {"block_q": 128, "block_k": 64}};
     #       empty dict when the program has no kernel blocks
+    #       "pruned_invalid" (inside "tuning") — how many candidate
+    #       configs the static verifier (repro.core.verify) rejected
+    #       before pricing/measuring; 0 for a healthy pipeline (the
+    #       verifier prunes nothing the simulator approved)
     #   "kernel_variants"    — the same mapping hoisted to the top level
     #       so ``execute()`` (and winner_exec_kwargs) launch the winning
     #       tile sizes by default
@@ -292,6 +304,14 @@ class Plan:
     #       (repro.core.tunecache) answered, and how many execution
     #       classes were measured this call (0 on a hit)
     #   "fuse_loops"/"donate" — how the winning plan wants executing
+    # and by the static plan verifier (repro.core.verify):
+    #   "verify"             — {"ok", "checked_ops", "n_errors",
+    #       "n_lints", "counts"}: the verifier's verdict for this plan
+    #       (counts maps violation kind -> occurrences; lints — e.g.
+    #       the naive policy's redundant transfers — never fail a
+    #       plan).  Set by plan(), tune() and cache-hit rebuilds; the
+    #       full op-indexed diagnostics live on the VerifyReport the
+    #       verifier returns, not in meta.
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def directives(self, cls=None) -> List[Directive]:

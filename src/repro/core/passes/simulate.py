@@ -17,7 +17,7 @@ import dataclasses
 from typing import Dict, List, Set, Tuple
 
 from ..ir import (AdvancedLoad, BlockKind, Callsite, DelegateStore, PlanOp,
-                  Program, VarIO)
+                  Program, Synchronize, VarIO)
 from .base import Pass, PlanDraft
 
 __all__ = ["SimulateFixPass", "NoupdatePass", "PlanGap", "simulate"]
@@ -39,15 +39,17 @@ def simulate(program: Program, ops: List[PlanOp]):
     after iteration 2 (ours don't: block read/write sets are static).
 
     Returns (always_redundant positions, gaps) where gaps is a list of
-    (pos, emergency PlanOp) needed for correctness.  Raises ``PlanGap``
-    when no emergency transfer can fix a hole.
+    (pos, emergency PlanOps) needed for correctness — an emergency
+    download arrives with its own preceding ``Synchronize`` so the fixed
+    plan passes the static verifier's async-race check.  Raises
+    ``PlanGap`` when no emergency transfer can fix a hole.
     """
     state: Dict[str, _VState] = {
         v: _VState(True, False) for v in program.inputs
     }
     load_hits: Dict[int, List[bool]] = {}   # op position -> redundancy
     store_hits: Dict[int, List[bool]] = {}
-    gaps: Dict[Tuple[int, str, str], Tuple[int, PlanOp]] = {}
+    gaps: Dict[Tuple[int, str, str], Tuple[int, Tuple[PlanOp, ...]]] = {}
 
     # pre-index loop spans
     spans: Dict[int, Tuple[int, int]] = {}
@@ -98,12 +100,26 @@ def simulate(program: Program, ops: List[PlanOp]):
                         if not src_ok:
                             raise PlanGap(
                                 f"{blk.name!r} reads {v!r} but no valid "
-                                f"copy exists anywhere")
-                        fix = (AdvancedLoad(v, group=0, asynchronous=False)
-                               if on_device else DelegateStore(v, group=0))
-                        key = (i, v, type(fix).__name__)
-                        gaps.setdefault(
-                            key, (i, PlanOp("directive", directive=fix)))
+                                "copy exists anywhere")
+                        if on_device:
+                            fix = (PlanOp("directive",
+                                          directive=AdvancedLoad(
+                                              v, group=0,
+                                              asynchronous=False)),)
+                        else:
+                            # the emergency download must be preceded by
+                            # a wait point: the device value may come
+                            # from an asynchronous callsite, and an
+                            # unsynchronized d2h of it is the async race
+                            # the plan verifier rejects
+                            fix = (PlanOp("directive",
+                                          directive=Synchronize(
+                                              block_idx=-1, group=0)),
+                                   PlanOp("directive",
+                                          directive=DelegateStore(
+                                              v, group=0)))
+                        key = (i, v, type(fix[-1].directive).__name__)
+                        gaps.setdefault(key, (i, fix))
                         if on_device:
                             st.valid_device = True
                         else:
@@ -145,8 +161,8 @@ class SimulateFixPass(Pass):
                     f"planner produced an invalid plan: {e}")
             if gaps:
                 # insert emergency transfers (kept rare by construction)
-                for pos, op in sorted(gaps, key=lambda t: -t[0]):
-                    ops = ops[:pos] + [op] + ops[pos:]
+                for pos, fix_ops in sorted(gaps, key=lambda t: -t[0]):
+                    ops = ops[:pos] + list(fix_ops) + ops[pos:]
                 continue
             if self.elide and redundant:
                 ops = [op for i, op in enumerate(ops)

@@ -44,7 +44,7 @@ def plan(program: Program, *, optimize: bool = True,
          policy: Optional[str] = None,
          analysis: Optional[ProgramAnalysis] = None,
          n_streams: Optional[int] = None, backend=None,
-         **tune_kwargs) -> Plan:
+         verify: bool = True, **tune_kwargs) -> Plan:
     """Plan ``program`` under a placement policy (see module docstring).
 
     ``optimize`` is the legacy switch (True → "optimized", False →
@@ -55,6 +55,13 @@ def plan(program: Program, *, optimize: bool = True,
     ``use_calibration`` — a repeated auto call answers from the
     persistent tuning cache without re-measuring); an explicit
     ``n_streams`` pins the auto policy's stream axis to that value.
+
+    Every returned plan is vetted by the static verifier
+    (``repro.core.verify``): a plan with race / transfer-consistency /
+    donation-safety errors raises ``PlanVerificationError`` instead of
+    being returned, and the verdict is recorded in ``meta["verify"]``.
+    ``verify=False`` skips the check (the tuner verifies its candidates
+    itself; hand-driven pipelines can opt out).
     """
     if policy is None:
         policy = "optimized" if optimize else "naive"
@@ -73,6 +80,12 @@ def plan(program: Program, *, optimize: bool = True,
     pl = Pipeline.default(policy, n_streams=2 if n_streams is None
                           else n_streams).run(program, analysis=analysis)
     pl.meta["optimize"] = policy != "naive"
+    if verify:
+        from .verify import verify_plan
+        shapes = analysis.shapes if analysis is not None else None
+        report = verify_plan(pl, shapes=shapes)
+        pl.meta["verify"] = report.meta_record()
+        report.raise_if_failed()
     return pl
 
 

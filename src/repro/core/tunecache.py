@@ -216,6 +216,16 @@ class TuneCache:
             pass
         return entry.get("payload")
 
+    def evict(self, slot: str) -> None:
+        """Drop ``slot``'s entry (used when a stored payload is corrupt
+        or its rebuilt winner no longer passes the plan verifier — the
+        fingerprint cannot see inside the payload, so the verifier is
+        the load-time integrity check)."""
+        try:
+            self._slot_path(slot).unlink()
+        except OSError:
+            pass
+
     def store(self, slot: str, fingerprint: str, payload: Dict) -> None:
         self.path.mkdir(parents=True, exist_ok=True)
         entry = {"slot": slot, "fingerprint": fingerprint,

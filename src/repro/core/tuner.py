@@ -64,12 +64,13 @@ from ..roofline.analysis import (HW, dot_flops, fit_offload_constants,
                                  kernel_roofline_terms, offload_cost_terms,
                                  parse_hlo, rank_correlation)
 from .analysis import ProgramAnalysis, analyze
-from .backend import Backend, JaxDeviceBackend, get_backend
+from .backend import Backend, get_backend
 from .ir import (AdvancedLoad, BlockKind, DelegateStore, Plan, Program,
                  Synchronize)
 from .passes import Pipeline
 from .tunecache import (TuneCache, backend_fingerprint, default_cache,
                         grid_fingerprint, tuning_fingerprint)
+from .verify import PlanVerificationError, verify_plan
 
 __all__ = ["PlanConfig", "enumerate_configs", "predict_cost", "tune",
            "winner_exec_kwargs"]
@@ -413,16 +414,26 @@ def _resolve_cache(cache: Any) -> Optional[TuneCache]:
 
 
 def _cached_plan(program: Program, an: ProgramAnalysis, tuning: Dict,
-                 fp: str, tc: TuneCache) -> Plan:
+                 fp: str, tc: TuneCache, be: Backend) -> Plan:
     """Rebuild the winning plan from a cache hit: the pass pipeline is
     deterministic, so re-running it for the chosen config reproduces the
     measured winner's ops exactly; the serialized table is attached
-    verbatim (identical to the fresh run that stored it)."""
+    verbatim (identical to the fresh run that stored it).
+
+    The rebuilt winner is re-vetted by the static verifier — a corrupt
+    payload (malformed keys raise ``KeyError``/``StopIteration`` here)
+    or a stale one that no longer verifies against the current pipeline
+    raises, and the caller evicts the entry instead of executing it."""
     chosen = next(c for c in tuning["candidates"]
                   if c["label"] == tuning["chosen"])
     cfg = _cfg_from_dict(chosen["config"])
     pl = Pipeline.default(cfg.policy, n_streams=cfg.n_streams
                           ).run(program, analysis=an)
+    report = verify_plan(pl, donate=cfg.donate and be.supports_donation,
+                         kernel_variants=cfg.variants_map() or None,
+                         shapes=an.shapes)
+    pl.meta["verify"] = report.meta_record()
+    report.raise_if_failed()
     pl.meta["tuning"] = tuning
     pl.meta["fuse_loops"] = cfg.fuse_loops
     pl.meta["donate"] = cfg.donate
@@ -550,7 +561,14 @@ def tune(program: Program, *, backend: Any = None,
         if not refresh:
             payload = tc.lookup(slot, fp)
             if payload is not None:
-                return _cached_plan(program, an, payload["tuning"], fp, tc)
+                try:
+                    return _cached_plan(program, an, payload["tuning"],
+                                        fp, tc, be)
+                except (PlanVerificationError, KeyError, StopIteration,
+                        TypeError, ValueError):
+                    # corrupt payload or a winner that no longer passes
+                    # the verifier: evict and fall through to a fresh run
+                    tc.evict(slot)
 
     # -- pricing constants: calibrated when a fit is cached -----------------
     pricing_hw = dict(HW)
@@ -597,6 +615,21 @@ def tune(program: Program, *, backend: Any = None,
         key = (tuple(pl.ops), eff_fuse, eff_donate, cfg.kernel_variants)
         survivor = classes.get(key)
         if survivor is None:
+            # every execution class is statically vetted BEFORE it is
+            # priced or measured: a candidate the verifier rejects is
+            # recorded invalid (never ranked, never run) and counted in
+            # meta["tuning"]["pruned_invalid"].  Verification depends
+            # exactly on the class key (ops, donation, kernel tiles),
+            # so aliases inherit the survivor's verdict.
+            vrep = verify_plan(pl, donate=eff_donate,
+                               kernel_variants=cfg.variants_map() or None,
+                               shapes=an.shapes, collect_lints=False)
+            if not vrep.ok:
+                base.update(valid=False, error="verifier: " + "; ".join(
+                    str(v) for v in vrep.errors[:3]))
+                classes[key] = base
+                records.append(base)
+                continue
             if flops_cache is None:
                 flops_cache = _block_flops(program, an.shapes)
             base.update(predict_cost(pl, cfg, flops_cache, hw=pricing_hw,
@@ -606,7 +639,10 @@ def tune(program: Program, *, backend: Any = None,
         else:
             survivor["aliases"].append(cfg.label)
             base["alias_of"] = survivor["label"]
-            base.update({k: survivor[k] for k in _COST_FIELDS})
+            if not survivor["valid"]:
+                base.update(valid=False, error=survivor["error"])
+            else:
+                base.update({k: survivor[k] for k in _COST_FIELDS})
         records.append(base)
 
     valid = [r for r in records if r["valid"]]
@@ -660,8 +696,18 @@ def tune(program: Program, *, backend: Any = None,
         "hw": {k: pricing_hw[k] for k in _HW_KEYS},
         "calibration": calibration,
         "kernel_variants": chosen_cfg.variants_map(),
+        "pruned_invalid": sum(
+            1 for r in records
+            if not r["valid"] and str(r["error"]).startswith("verifier:")),
         "candidates": valid + [r for r in records if not r["valid"]],
     }
+    # the winner's full verdict (lints included) — the per-class vet
+    # above ran error-only
+    vrep = verify_plan(
+        best, donate=chosen["config"]["donate"] and be.supports_donation,
+        kernel_variants=chosen_cfg.variants_map() or None,
+        shapes=an.shapes)
+    best.meta["verify"] = vrep.meta_record()
     best.meta["fuse_loops"] = chosen["config"]["fuse_loops"]
     best.meta["donate"] = chosen["config"]["donate"]
     best.meta["kernel_variants"] = chosen_cfg.variants_map()

@@ -11,8 +11,7 @@ uncompressed quality (tested in tests/test_collectives.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ tests/test_pipeline.py on an 8-device mesh and by the
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -235,7 +235,8 @@ class MeshPolicy:
         self.rules = rules
         b = batch_axes(rules.mesh)
         m = "model"
-        div = lambda n: (m if n % rules.axis_size(m) == 0 else None)
+        def div(n):
+            return m if n % rules.axis_size(m) == 0 else None
         if seq_shard:
             emb_spec = PartitionSpec(b, m, None)
         else:

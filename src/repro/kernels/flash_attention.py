@@ -73,8 +73,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(ki == n_k - 1)
     def _finish():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+        lse = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / lse[..., None]).astype(o_ref.dtype)
 
 
 def flash_attention_folded(q, k, v, *, causal: bool = True, window: int = 0,

@@ -91,7 +91,8 @@ def wkv6(r, k, v, w, u, *, block_t: int = 64, interpret: bool = None):
     if interpret is None:
         interpret = default_interpret()
     B, T, H, hs = r.shape
-    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, T, hs)
+    def fold(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, T, hs)
     uu = jnp.broadcast_to(u[None], (B, H, hs)).reshape(B * H, hs)
     o, s = _wkv.wkv6_folded(fold(r), fold(k), fold(v), fold(w), uu,
                             block_t=block_t, interpret=interpret)

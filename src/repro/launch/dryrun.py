@@ -14,12 +14,12 @@ module, so they see the real single CPU device.
 
 import argparse          # noqa: E402
 import json              # noqa: E402
-import re                # noqa: E402
 import time              # noqa: E402
 import traceback         # noqa: E402
 from pathlib import Path  # noqa: E402
 
-import jax               # noqa: E402
+# imported for effect: locks the 512-device host platform configured above
+import jax               # noqa: E402,F401
 
 from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
 from repro.launch.mesh import make_production_mesh        # noqa: E402

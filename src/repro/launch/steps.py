@@ -3,12 +3,10 @@ every (arch × shape) cell.  Used by the dry-run, the train/serve drivers and
 the benchmarks."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs import ArchConfig, ShapeSpec

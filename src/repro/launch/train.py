@@ -27,8 +27,6 @@ import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, reduced as reduce_cfg
@@ -36,7 +34,6 @@ from repro.data import PrefetchIterator, SyntheticLM
 from repro.models import Transformer
 from repro.optim import default_optimizer
 from repro.runtime import FaultInjector, StepWatchdog
-
 
 def make_train_step(model, opt):
     def train_step(params, opt_state, batch):
@@ -72,7 +69,6 @@ def train(cfg, *, steps: int, batch: int, seq: int, ckpt_dir: str,
     step_fn = make_train_step(model, opt)
 
     losses = []
-    last_metrics = None
     t_start = time.perf_counter()
     try:
         for step in range(start_step, steps):
@@ -82,8 +78,8 @@ def train(cfg, *, steps: int, batch: int, seq: int, ckpt_dir: str,
                 injector.maybe_fail(step)
             params, opt_state, metrics = step_fn(params, opt_state,
                                                  batch_dev)
-            last_metrics = metrics      # stays on device (delegatestore
-            #                             deferred until the log step)
+            # metrics stay on device (delegatestore deferred until the
+            # log step below forces the sync)
             if (step + 1) % log_every == 0 or step + 1 == steps:
                 loss = float(metrics["loss"])      # ← the sync point
                 losses.append((step + 1, loss))

@@ -8,7 +8,7 @@ validated against the same oracle in tests.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,6 @@ NEG_INF = -1e30
 def attn_spec(cfg, prefix_shape=(), prefix_names=()) -> Dict[str, P]:
     pa, pn = tuple(prefix_shape), tuple(prefix_names)
     d, q = cfg.d_model, cfg.n_heads * cfg.d_head
-    kv = cfg.n_kv_heads * cfg.d_head
     spec = {
         "w_q": P(pa + (d, cfg.n_heads, cfg.d_head),
                  pn + ("embed", "heads", "head_dim")),
@@ -95,7 +94,7 @@ def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
         q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
 
         def kv_step(carry, kv):
-            o, m, l = carry
+            o, m, lse = carry
             ki, kblk, vblk = kv
             k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
             s = jnp.einsum("bqkgd,btkd->bkgqt",
@@ -110,7 +109,7 @@ def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(axis=-1)
+            l_new = lse * corr + p.sum(axis=-1)
             pv = jnp.einsum("bkgqt,btkd->bkgqd", p,
                             vblk.astype(jnp.float32))
             o_new = o * corr[..., None] + pv
@@ -119,11 +118,11 @@ def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
         o0 = jnp.zeros((B, K, G, q_chunk, D), jnp.float32)
         m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
-        (o, m, l), _ = jax.lax.scan(
+        (o, m, lse), _ = jax.lax.scan(
             kv_step, (o0, m0, l0),
             (jnp.arange(nk), jnp.moveaxis(kf, 1, 0),
              jnp.moveaxis(vf, 1, 0)))
-        o = o / jnp.maximum(l[..., None], 1e-30)
+        o = o / jnp.maximum(lse[..., None], 1e-30)
         return jnp.moveaxis(o, 3, 1)           # (B, qc, K, G, D)
 
     o = jax.lax.map(one_q_block,

@@ -12,7 +12,7 @@ On real TPU the scan is the Pallas kernel ``repro.kernels.rglru_scan``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

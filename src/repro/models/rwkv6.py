@@ -11,7 +11,7 @@ shifts.  Training uses a time scan (Pallas chunked kernel on real TPU:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ Three entry points:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,7 @@ from .attention import attn_apply, attn_decode, attn_spec, init_kv_cache
 from .layers import (P, Policy, abstract_tree, axes_tree, cross_entropy,
                      ffn_apply, ffn_spec, init_tree, rms_norm)
 from .moe import moe_apply, moe_spec
-from .rglru import init_rglru_cache, rglru_apply, rglru_decode, rglru_spec
+from .rglru import init_rglru_cache, rglru_decode, rglru_spec
 from .rwkv6 import (init_rwkv_cache, rwkv6_channel_mix, rwkv6_spec,
                     rwkv6_time_mix)
 
@@ -173,7 +173,7 @@ def _attn_block(lp, x, cfg, positions, policy, window, use_pallas,
 
 
 def _rec_block(lp, x, cfg, policy, use_pallas, collect=False):
-    from .rglru import RGLRU_C, _conv1d, _gates, rglru_scan_ref
+    from .rglru import _conv1d, _gates, rglru_scan_ref
     xn = rms_norm(x, lp["ln1"], cfg.norm_eps)
     rp = lp["rglru"]
     u = xn @ rp["w_x"]

@@ -54,7 +54,8 @@ def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
             u = u / jnp.maximum(1.0, rms / clip_threshold)
             return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
 
-        is_leaf = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        def is_leaf(x):
+            return isinstance(x, dict) and ("v" in x or "vr" in x)
         flat_g, tdef = jax.tree.flatten(grads)
         flat_s = jax.tree.flatten(state["factors"], is_leaf=is_leaf)[0]
         flat_p = jax.tree.leaves(params)

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,8 @@ def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
           eps: float = 1e-8, weight_decay: float = 0.0,
           grad_clip: float = 1.0) -> Optimizer:
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {
             "m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),

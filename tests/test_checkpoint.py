@@ -1,8 +1,8 @@
 """Checkpoint manager: async save, atomic publish, restore, restart
 equivalence, elastic (structure-preserving) restore."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager

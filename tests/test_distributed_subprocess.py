@@ -5,7 +5,6 @@ import sys
 import textwrap
 from pathlib import Path
 
-import pytest
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 

@@ -18,9 +18,8 @@ host-oracle output contract.
 import numpy as np
 import pytest
 
-from repro.core import (AdvancedLoad, DelegateStore, JaxDeviceBackend,
-                        PlanExecutionError, Program, Release, Synchronize,
-                        compile_plan, execute, get_backend, naive_plan,
+from repro.core import (AdvancedLoad, DelegateStore, JaxDeviceBackend, Program,
+                        Release, Synchronize, execute, get_backend, naive_plan,
                         plan, run_host_oracle, transfer_summary)
 from repro.core.ir import PlanOp
 from repro.optim import plan_step_program

@@ -72,7 +72,8 @@ def test_wkv6_sweep(B, T, H, hs, block):
     w = jnp.asarray(RNG.uniform(0.2, 0.99, (B, T, H, hs)).astype(np.float32))
     u = _rand((H, hs), jnp.float32)
     o, s = ops.wkv6(r, k, v, w, u, block_t=block, interpret=True)
-    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, T, hs)
+    def fold(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, T, hs)
     uu = jnp.broadcast_to(u[None], (B, H, hs)).reshape(B * H, hs)
     o_ref, s_ref = ref.wkv6_ref(fold(r), fold(k), fold(v), fold(w), uu)
     o_ref = o_ref.reshape(B, H, T, hs).transpose(0, 2, 1, 3)
@@ -170,7 +171,8 @@ def test_every_registry_variant_matches_ref(kernel, shapes, variant):
         w = jnp.asarray(RNG.uniform(0.2, 0.99, shapes[3]).astype(np.float32))
         u = _rand(shapes[4], jnp.float32)
         o, s = ops.wkv6(r, k, v, w, u, **kw)
-        fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, T, hs)
+        def fold(t):
+            return t.transpose(0, 2, 1, 3).reshape(B * H, T, hs)
         uu = jnp.broadcast_to(u[None], (B, H, hs)).reshape(B * H, hs)
         o_ref, s_ref = ref.wkv6_ref(fold(r), fold(k), fold(v), fold(w), uu)
         o_ref = o_ref.reshape(B, H, T, hs).transpose(0, 2, 1, 3)

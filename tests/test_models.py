@@ -148,7 +148,8 @@ def test_rwkv_long_context_state_is_constant_memory():
     m = Transformer(cfg)
     c1 = jax.eval_shape(lambda: m.init_cache(1, 1_000))
     c2 = jax.eval_shape(lambda: m.init_cache(1, 500_000))
-    sz = lambda t: sum(np.prod(l.shape) for l in jax.tree.leaves(t))
+    def sz(t):
+        return sum(np.prod(x.shape) for x in jax.tree.leaves(t))
     assert sz(c1) == sz(c2)
 
 
@@ -173,7 +174,8 @@ def test_kv_quant_decode_close_to_fp():
             np.asarray(l1, np.float32) - np.asarray(l2, np.float32)))))
     assert err < 0.25, err
     # k/v bytes shrink by the dtype itemsize (bf16→int8: 2×; fp32→int8: 4×)
-    sz = lambda c: sum(int(np.prod(x.shape)) * x.dtype.itemsize
-                       for k, x in c.items() if k in ("k", "v"))
+    def sz(c):
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for k, x in c.items() if k in ("k", "v"))
     ratio = np.dtype(cfg.dtype).itemsize
     assert sz(cacheq) * ratio == sz(cache)

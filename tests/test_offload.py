@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AdvancedLoad, Callsite, DelegateStore, emit,
-                        execute, naive_plan, plan)
+from repro.core import (emit, execute, naive_plan, plan)
 from repro.optim import (adamw, host_memory_kind, offload_shardings,
                          plan_step_program, supports_pinned_host)
 

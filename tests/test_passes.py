@@ -19,9 +19,8 @@ from repro.core import (AdvancedLoad, DelegateStore, GroupDecl, Program,
                         Release, Synchronize, execute, naive_plan, plan,
                         run_host_oracle, transfer_summary)
 from repro.core.ir import PlanOp
-from repro.core.passes import (GroupedPlacement, NaivePlacement,
-                               OptimizedPlacement, Pipeline, PlanDraft,
-                               assign_streams, get_placement,
+from repro.core.passes import (NaivePlacement, OptimizedPlacement, Pipeline,
+                               PlanDraft, assign_streams, get_placement,
                                placement_names, register_placement)
 from repro.optim import plan_step_program
 from repro.polybench import build, build_3mm

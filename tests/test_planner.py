@@ -1,10 +1,9 @@
 """Unit tests for the paper's directive-placement optimization."""
 import numpy as np
-import pytest
 
-from repro.core import (AdvancedLoad, Callsite, DelegateStore, Program,
-                        Synchronize, analyze, emit, execute, naive_plan,
-                        plan, run_host_oracle, transfer_summary)
+from repro.core import (AdvancedLoad, Callsite, Program, analyze, emit,
+                        execute, naive_plan, plan, run_host_oracle,
+                        transfer_summary)
 from repro.core.ir import VarIO
 
 

@@ -15,7 +15,8 @@ hypothesis = pytest.importorskip(
     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import execute, naive_plan, plan, run_host_oracle, Program
+from repro.core import (Program, execute, naive_plan,  # noqa: E402
+                        plan, run_host_oracle)
 
 VARS = ["a", "b", "c", "d", "e"]
 

@@ -3,9 +3,9 @@ multipliers, ring-volume collective accounting, dot-FLOP counting."""
 import numpy as np
 
 from repro.configs import SHAPES, get_config
-from repro.roofline.analysis import (HW, analytic_hbm_bytes,
-                                     analytic_model_flops, collective_bytes,
-                                     dot_flops, parse_hlo, roofline_terms)
+from repro.roofline.analysis import (analytic_hbm_bytes, analytic_model_flops,
+                                     collective_bytes, dot_flops, parse_hlo,
+                                     roofline_terms)
 
 SYNTHETIC_HLO = """
 HloModule test
@@ -92,7 +92,6 @@ def test_decode_memory_model_kv_quant_halves():
     full = analytic_hbm_bytes(cfg, sh, 256, kv_bytes=2)
     quant = analytic_hbm_bytes(cfg, sh, 256, kv_bytes=1)
     # params term is shared; the KV term halves
-    p_term = 2 * 32.4e9 * 2 / 256 / 2  # loose lower bound on params bytes
     assert quant < full
     assert (full - quant) > 0.3 * full  # KV dominates at 32k × 128
 

@@ -2,12 +2,10 @@
 functions of a mesh we can build abstractly via jax.sharding.Mesh over the
 single CPU device is impossible — so we use AbstractMesh)."""
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec
 
 from repro.configs import get_config
-from repro.distributed.sharding import (ShardingRules, abstract_mesh,
-                                        batch_axes, make_rules,
+from repro.distributed.sharding import (abstract_mesh, batch_axes, make_rules,
                                         spec_for_axes)
 
 

@@ -53,7 +53,7 @@ def test_train_loss_decreases():
     with tempfile.TemporaryDirectory() as d:
         out = train(cfg, steps=120, batch=8, seq=64, ckpt_dir=d,
                     ckpt_every=1000, log_every=10)
-    losses = [l for _, l in out["losses"]]
+    losses = [v for _, v in out["losses"]]
     # compare best-of-late vs first log to be robust to step noise
     assert min(losses[-4:]) < losses[0] - 0.15, losses
 

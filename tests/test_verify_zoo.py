@@ -1,0 +1,42 @@
+"""Every program in the repo verifies clean under every placement policy.
+
+ISSUE 7 satellite: the verifier must accept all plans the planner can
+produce — the polybench suite, the optimizer-offload train-step builders
+and the kernel-tagged attention step, across every registered placement.
+Naive plans are allowed (expected, for 3MM) to carry redundant-transfer
+*lints*; none may carry errors.
+"""
+import pytest
+
+from repro.core import placement_names, plan, verify_plan
+from repro.optim import attention_step_program, plan_step_program
+from repro.polybench import PROBLEMS, build
+
+POLICIES = placement_names()
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("name", sorted(PROBLEMS))
+def test_polybench_verifies_clean(name, policy):
+    p = build(name, n=32)[0]
+    pl = plan(p, policy=policy)
+    rep = verify_plan(pl)
+    assert rep.ok, rep.summary()
+    assert pl.meta["verify"]["ok"] is True
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("builder", [plan_step_program,
+                                     attention_step_program],
+                         ids=["train_step", "attention_step"])
+def test_offload_builders_verify_clean(builder, policy):
+    pl = plan(builder(n_steps=1), policy=policy)
+    assert verify_plan(pl).ok
+
+
+def test_naive_3mm_lints_but_verifies(polybench_3mm=None):
+    """The paper's running example: naive placement wastes transfers on
+    E and F — lints, not errors (Table 2 motivation)."""
+    pl = plan(build("3mm", n=32)[0], policy="naive")
+    rep = verify_plan(pl)
+    assert rep.ok and rep.counts().get("redundant-directive", 0) >= 2

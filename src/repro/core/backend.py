@@ -16,8 +16,10 @@ events — so the same ``Plan`` can run against:
     ``jax.device_put`` enqueued on one of ``n_streams`` logical transfer
     streams (double-buffered by default), launches are jitted and dispatch
     asynchronously, and ``sync(stream)`` is a *real* wait point: it blocks
-    on every event outstanding on that stream.  Optional buffer donation
-    for fused launches.
+    on every event outstanding on that stream.  Buffer donation for
+    fused launches is ON by default (the serving engine's decode path
+    exercises it every step); construct with ``donate=False`` to opt
+    out.
 
 ``PinnedHostBackend``
     Same as ``JaxDeviceBackend`` but the host side of every transfer is
@@ -275,8 +277,14 @@ class JaxDeviceBackend(Backend):
     name = "jax"
     supports_donation = True
 
+    # Donation defaults ON (ISSUE 8): the serve decode path donates the
+    # pooled KV cache every step, and the tuner always measures donate
+    # candidates on an explicit ``variant(donate=...)`` twin, so the
+    # default only affects direct ``execute()`` callers — whose inputs
+    # are re-uploaded from host per call and never alias a donated
+    # buffer.  ``donate=False`` is the explicit opt-out.
     def __init__(self, device=None, *, n_streams: int = 2,
-                 donate: bool = False):
+                 donate: bool = True):
         super().__init__()
         import jax
         self._jax = jax
@@ -410,7 +418,7 @@ class PinnedHostBackend(JaxDeviceBackend):
     name = "pinned"
 
     def __init__(self, device=None, *, n_streams: int = 2,
-                 donate: bool = False):
+                 donate: bool = True):
         super().__init__(device, n_streams=n_streams, donate=donate)
         from repro.optim.offload import host_memory_kind
         kind = host_memory_kind(self._device)

@@ -5,8 +5,15 @@ are uploaded once and stay device-resident (noupdate); per-request tokens
 are the only per-step host→device transfer (advancedload of a few bytes);
 sampled tokens are fetched back lazily in batches (delegatestore).
 
+``serve()`` is the one-shot static-batch path: one group of ``batch``
+identical requests, prefill + ``gen - 1`` decode steps.  The continuous-
+batching engine (``repro.serve``) generalizes it to request-level
+scheduling; ``--engine`` runs a seeded open-loop trace through it.
+
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
         --batch 4 --prompt-len 16 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
+        --engine --n-requests 24 --rate 50 --capacity 4 --policy fcfs
 """
 from __future__ import annotations
 
@@ -42,6 +49,7 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0):
     if cfg.n_codebooks:
         logits = logits[..., 0, :]
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(tok)
     t_prefill = time.perf_counter() - t0
 
     out_tokens = [tok]
@@ -61,12 +69,34 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0):
     # delegatestore: one fetch for the whole generation
     generated = np.stack([np.asarray(t) for t in out_tokens], axis=1)
     t_decode = time.perf_counter() - t0
+    # gen == 1 never enters the decode loop: the only token comes from the
+    # prefill, so decode throughput is 0 by definition (not prefill tokens
+    # divided by an ~empty decode timer, which reported nonsense here).
+    decode_tok_s = (batch * (gen - 1) / max(t_decode, 1e-9)
+                    if gen > 1 else 0.0)
+    total = t_prefill + t_decode
     return {
         "generated": generated,
         "prefill_s": t_prefill,
         "decode_s": t_decode,
-        "tokens_per_s": batch * gen / max(t_decode, 1e-9),
+        "decode_tok_s": decode_tok_s,
+        "tokens_per_s": batch * gen / max(total, 1e-9),
     }
+
+
+def run_engine(cfg, *, n_requests: int, rate_rps: float, capacity: int,
+               policy: str, join_policy: str = "continuous",
+               max_seq: int = 64, seed: int = 0,
+               respect_arrivals: bool = True):
+    """Replay a seeded open-loop trace through the continuous-batching
+    engine (``repro.serve``) and return its report."""
+    from repro.serve import Engine, ServeRuntime, make_trace
+    rt = ServeRuntime(cfg, max_seq=max_seq, seed=seed)
+    eng = Engine(rt, capacity=capacity, join_policy=join_policy,
+                 policy=policy)
+    reqs = make_trace(cfg, n_requests=n_requests, rate_rps=rate_rps,
+                      seed=seed, max_seq=max_seq)
+    return eng.run(reqs, respect_arrivals=respect_arrivals)
 
 
 def main():
@@ -76,15 +106,43 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine over a seeded trace")
+    ap.add_argument("--n-requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="open-loop arrival rate (requests/s)")
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "sjf"))
+    ap.add_argument("--join-policy", default="continuous",
+                    choices=("continuous", "static"))
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
+
+    if args.engine:
+        rep = run_engine(cfg, n_requests=args.n_requests,
+                         rate_rps=args.rate, capacity=args.capacity,
+                         policy=args.policy, join_policy=args.join_policy,
+                         max_seq=args.max_seq, seed=args.seed)
+        print(f"[serve.engine] {rep['n_requests']} requests in "
+              f"{rep['wall_s']:.2f}s  {rep['requests_per_s']:.1f} req/s  "
+              f"{rep['tokens_per_s']:.0f} tok/s  "
+              f"p50={rep['latency_p50_s']*1e3:.0f}ms "
+              f"p99={rep['latency_p99_s']*1e3:.0f}ms  "
+              f"occupancy={rep['occupancy']:.2f}")
+        print(f"[serve.engine] tune: {rep['tune']['measurements']} measured "
+              f"/ {rep['tune']['hits']} cached  pool: {rep['pool']}")
+        return
+
     out = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                 gen=args.gen)
     print(f"[serve] generated shape {out['generated'].shape} "
           f"prefill={out['prefill_s']:.2f}s decode={out['decode_s']:.2f}s "
-          f"({out['tokens_per_s']:.0f} tok/s)")
+          f"({out['tokens_per_s']:.0f} tok/s end-to-end, "
+          f"{out['decode_tok_s']:.0f} tok/s decode)")
     print("[serve] sample:", out["generated"][0][:12])
 
 

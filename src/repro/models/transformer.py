@@ -347,15 +347,24 @@ class Transformer:
 
     # ---- serving ---------------------------------------------------------
     def prefill(self, params, batch, max_seq: int,
-                policy: Optional[Policy] = None):
-        """Forward over the prompt; returns (last-token logits, caches)."""
+                policy: Optional[Policy] = None, last_pos=None):
+        """Forward over the prompt; returns (last-token logits, caches).
+
+        ``last_pos`` ((B,) int32, optional) selects the position whose
+        logits are returned instead of ``S - 1`` — the serving engine
+        right-pads prompts to a shape bucket and needs the logits of each
+        request's REAL last token.  Causality keeps hidden states at
+        positions ``<= last_pos`` independent of the padding suffix, and
+        the decode-side validity mask (``cache_pos <= pos``) hides the
+        padded KV entries until decode overwrites them in place."""
         cfg = self.cfg
         x = self._embed(params, batch, policy)
         B, S, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         h, _, caches = self._backbone(params, x, positions, policy,
                                       collect=True, max_seq=max_seq)
-        h = rms_norm(h[:, -1], params["final_norm"], cfg.norm_eps)
+        hl = h[:, -1] if last_pos is None else h[jnp.arange(B), last_pos]
+        h = rms_norm(hl, params["final_norm"], cfg.norm_eps)
         logits = h @ params["head"]
         if cfg.n_codebooks:
             logits = logits.reshape(B, cfg.n_codebooks, cfg.vocab)

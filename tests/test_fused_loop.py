@@ -247,8 +247,8 @@ class TestFusedLoopDonation:
         assert not A.is_deleted()       # read-only state is kept
 
     def test_gated_behind_donate_flag(self):
-        """donate=False (the default) must leave every carry buffer
-        alive — donation is opt-in."""
+        """donate=False (the explicit opt-out — donation is the default
+        since ISSUE 8) must leave every carry buffer alive."""
         be = JaxDeviceBackend(donate=False)
         C = be.upload(np.ones((8, 8), np.float32))
 
@@ -264,7 +264,7 @@ class TestFusedLoopDonation:
         and logical stats as the non-donating one, for both a flat
         fused loop and a nested one."""
         be_d = JaxDeviceBackend(donate=True)
-        be_n = get_backend("jax")
+        be_n = JaxDeviceBackend(donate=False)
         p = _nested_prog(2, 3) if nested else _loop_prog(iters=5)
         pl = plan(p)
         out_d, s_d = execute(pl, mode="compiled", backend=be_d)

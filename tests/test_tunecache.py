@@ -315,16 +315,17 @@ class TestDominancePruning:
 class TestBackendVariant:
     def test_jax_variant_pool(self):
         be = JaxDeviceBackend()
+        assert be.donate                 # donation is on by default (ISSUE 8)
         v3 = be.variant(n_streams=3)
         assert v3.n_streams == 3 and v3.donate == be.donate
         assert be.variant(n_streams=3) is v3          # memoized
         assert be.variant() is be
         # variant-of-variant folds back onto the original instance so
         # jit/lowering caches are shared across tuning calls
-        assert v3.variant(n_streams=be.n_streams, donate=False) is be
-        vd = be.variant(donate=True)
-        assert vd.donate and vd.n_streams == be.n_streams
-        assert vd.variant(donate=False) is be
+        assert v3.variant(n_streams=be.n_streams, donate=True) is be
+        vn = be.variant(donate=False)                 # explicit opt-out
+        assert not vn.donate and vn.n_streams == be.n_streams
+        assert vn.variant(donate=True) is be
 
     def test_numpy_has_no_variants(self):
         be = NumpyHostBackend()

@@ -203,8 +203,15 @@ def bench_tuner(out_path: str = "tuning_report.json") -> Dict:
         chosen = pl.predicted_cost()
         cal = tuning.get("calibration") or {}
         report["programs"][name] = tuning
+        # roofline drift: measured-vs-predicted kernel_s residual across
+        # every measured variant (ISSUE 9 satellite — per-candidate
+        # residuals live in the candidate records themselves)
+        resid = [abs(c.get("kernel_residual_s") or 0.0)
+                 for c in tuning["candidates"]
+                 if c.get("measured_kernel_s") is not None]
         rows[name] = {
             "chosen": tuning["chosen"],
+            "max_kernel_residual_ms": max(resid, default=0.0) * 1e3,
             "n_candidates": sum(1 for c in tuning["candidates"]
                                 if c["valid"]),
             "n_kernel_variants": n_kernel_variants(tuning["candidates"]),

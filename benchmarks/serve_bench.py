@@ -132,7 +132,8 @@ def bench(*, arch: str, n_requests: int, capacity: int, max_seq: int,
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--arch", default="qwen2.5-14b,rwkv6-3b",
+                    help="comma-separated arch list (one bench row each)")
     ap.add_argument("--n-requests", type=int, default=48)
     ap.add_argument("--capacity", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
@@ -147,15 +148,20 @@ def main(argv=None):
         args.n_requests = 20
         args.capacity = min(args.capacity, 4)
 
-    row = bench(arch=args.arch, n_requests=args.n_requests,
-                capacity=args.capacity, max_seq=args.max_seq,
-                seed=args.seed, gate=args.check)
+    rows = []
+    for arch in [a.strip() for a in args.arch.split(",") if a.strip()]:
+        rows.append(bench(arch=arch, n_requests=args.n_requests,
+                          capacity=args.capacity, max_seq=args.max_seq,
+                          seed=args.seed, gate=args.check))
     path = args.out or f"BENCH_serve_{time.strftime('%Y%m%d')}.json"
-    snap = {"date": time.strftime("%Y-%m-%d"), "bench": "serve", "row": row}
+    snap = {"date": time.strftime("%Y-%m-%d"), "bench": "serve",
+            "rows": rows,
+            # single-arch "row" kept so older trajectory diffs keep working
+            "row": rows[0]}
     with open(path, "w") as f:
         json.dump(snap, f, indent=2, sort_keys=True, default=float)
     print(f"[serve_bench] snapshot written to {path}")
-    return row
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,0 +1,118 @@
+"""Benchmark trajectory: diff the last two dated tuning snapshots.
+
+``directive_micro --tune`` writes ``BENCH_<YYYYMMDD>.json`` at the repo
+root on every run; committing them gives the repo a measured performance
+trajectory.  This tool compares the two most recent snapshots
+program-by-program and flags regressions:
+
+* ``measured_ms``  > 10% slower  → regression (the real gate)
+* ``predicted_ms`` > 10% higher  → cost-model drift note (only a
+  regression when the cost-model version did NOT change between the two
+  snapshots — a version bump legitimately reprices everything)
+* a program present before but missing now → coverage regression
+
+    PYTHONPATH=src python benchmarks/trajectory.py            # report
+    PYTHONPATH=src python benchmarks/trajectory.py --gate     # exit 1 on
+                                                              # regression
+
+With fewer than two snapshots there is nothing to diff: the tool prints
+a note and exits 0 (first run on a fresh clone must not fail CI).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+REGRESSION_PCT = 10.0
+_SNAP_RE = re.compile(r"BENCH_(\d{8})\.json$")
+
+
+def find_snapshots(root: str = ".") -> List[str]:
+    """Dated tune snapshots, oldest → newest (serve snapshots —
+    ``BENCH_serve_*`` — have their own schema and are excluded)."""
+    paths = [p for p in glob.glob(os.path.join(root, "BENCH_*.json"))
+             if _SNAP_RE.search(os.path.basename(p))]
+    return sorted(paths, key=lambda p: _SNAP_RE.search(p).group(1))
+
+
+def _load(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _pct(new: float, old: float) -> Optional[float]:
+    if not old:
+        return None
+    return (new - old) / old * 100.0
+
+
+def diff(prev: Dict, curr: Dict) -> Tuple[List[str], List[str]]:
+    """(regressions, notes) between two snapshot payloads."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    same_cost_model = (prev.get("cost_model_version")
+                       == curr.get("cost_model_version"))
+    if not same_cost_model:
+        notes.append(
+            f"cost model {prev.get('cost_model_version')} -> "
+            f"{curr.get('cost_model_version')}: predicted_ms drift is "
+            "expected and not gated")
+    p_prog = prev.get("programs", {})
+    c_prog = curr.get("programs", {})
+    for name in sorted(p_prog):
+        if name not in c_prog:
+            regressions.append(f"{name}: present in previous snapshot but "
+                               "missing now (coverage regression)")
+            continue
+        old, new = p_prog[name], c_prog[name]
+        for key, gated in (("measured_ms", True),
+                           ("predicted_ms", same_cost_model)):
+            d = _pct(float(new.get(key) or 0.0), float(old.get(key) or 0.0))
+            if d is None:
+                continue
+            line = (f"{name}: {key} {old[key]:.3f} -> {new[key]:.3f} "
+                    f"({d:+.1f}%)")
+            if d > REGRESSION_PCT and gated:
+                regressions.append(line)
+            elif abs(d) > REGRESSION_PCT:
+                notes.append(line)
+    for name in sorted(set(c_prog) - set(p_prog)):
+        notes.append(f"{name}: new program (no previous measurement)")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".", help="where BENCH_*.json live")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 when a >10%% measured regression is found")
+    args = ap.parse_args(argv)
+
+    snaps = find_snapshots(args.root)
+    if len(snaps) < 2:
+        print(f"[trajectory] {len(snaps)} snapshot(s) found — need two to "
+              "diff; nothing to do")
+        return 0
+    prev_path, curr_path = snaps[-2], snaps[-1]
+    prev, curr = _load(prev_path), _load(curr_path)
+    print(f"[trajectory] {os.path.basename(prev_path)} -> "
+          f"{os.path.basename(curr_path)}")
+    regressions, notes = diff(prev, curr)
+    for n in notes:
+        print(f"  note: {n}")
+    for r in regressions:
+        print(f"  REGRESSION: {r}")
+    if not regressions and not notes:
+        print("  all programs within the 10% envelope")
+    if regressions and args.gate:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

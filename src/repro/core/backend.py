@@ -141,8 +141,14 @@ class Backend:
         """Fresh zero device buffer (used for pruned/dead block inputs)."""
         raise NotImplementedError
 
-    def upload(self, host: np.ndarray, *, stream: int = 0) -> Any:
-        """h2d: returns a device handle; completion tracked on ``stream``."""
+    def upload(self, host: np.ndarray, *, stream: int = 0,
+               name: Optional[str] = None) -> Any:
+        """h2d: returns a device handle; completion tracked on ``stream``.
+
+        ``name`` is the plan variable being uploaded — mesh/sharded
+        backends key per-variable placements on it (``MeshBackend``
+        shards or replicates by name); single-device backends ignore
+        it."""
         raise NotImplementedError
 
     def download(self, handle: Any, *, stream: int = 0) -> np.ndarray:
@@ -236,7 +242,7 @@ class NumpyHostBackend(Backend):
     def alloc(self, shape, dtype):
         return np.zeros(shape, dtype)
 
-    def upload(self, host, *, stream: int = 0):
+    def upload(self, host, *, stream: int = 0, name=None):
         handle = np.array(host, copy=True)
         self._record(stream, Event(payload=None, _done=True))
         return handle
@@ -320,7 +326,7 @@ class JaxDeviceBackend(Backend):
         import jax.numpy as jnp
         return jnp.zeros(shape, dtype)
 
-    def upload(self, host, *, stream: int = 0):
+    def upload(self, host, *, stream: int = 0, name=None):
         handle = self._jax.device_put(host, self._device)   # async dispatch
         self._record(stream, Event(payload=handle))
         return handle
@@ -431,10 +437,10 @@ class PinnedHostBackend(JaxDeviceBackend):
     def _host_space(self):
         return self._pinned_sharding
 
-    def upload(self, host, *, stream: int = 0):
+    def upload(self, host, *, stream: int = 0, name=None):
         if self._pinned_sharding is not None:
             host = self._jax.device_put(host, self._pinned_sharding)
-        return super().upload(host, stream=stream)
+        return super().upload(host, stream=stream, name=name)
 
 
 _REGISTRY: Dict[str, Callable[[], Backend]] = {
@@ -462,6 +468,10 @@ def get_backend(spec: Any = None) -> Backend:
     if spec is None:
         spec = "jax"
     if spec not in _INSTANCES:
+        if spec == "mesh" and "mesh" not in _REGISTRY:
+            # registered on import (distributed code never loads for
+            # single-device callers otherwise)
+            from repro.distributed import mesh_backend  # noqa: F401
         try:
             factory = _REGISTRY[spec]
         except KeyError:

@@ -421,7 +421,7 @@ class CompiledPlan:
                     raise PlanExecutionError(
                         f"fused loop reads {v!r}: not on device "
                         "(missing advancedload)")
-                slot.device = be.upload(slot.host)
+                slot.device = be.upload(slot.host, name=v)
                 slot.valid_device = True
             carry[v] = slot.device
 
@@ -485,7 +485,7 @@ class CompiledPlan:
                     raise PlanExecutionError(
                         f"compiled segment reads {v!r}: not on device "
                         "(missing advancedload)")
-                slot.device = be.upload(slot.host)
+                slot.device = be.upload(slot.host, name=v)
                 slot.valid_device = True
             args.append(slot.device)
 

@@ -167,6 +167,12 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
         kernel_variants = p.meta.get("kernel_variants")
     kernel_variants = _kv_norm(kernel_variants)
     be = get_backend(backend)
+    # a mesh-tuned plan carries its winning per-variable placement in
+    # meta["mesh"]; re-apply it on any placement-capable backend so
+    # executing the winner directly shards exactly as measured
+    mesh_meta = p.meta.get("mesh")
+    if mesh_meta and hasattr(be, "with_placement"):
+        be = be.with_placement(mesh_meta.get("specs") or {})
     if verify is None:
         verify = _verify_default()
     if verify:
@@ -195,6 +201,12 @@ def execute(p: Plan, inputs: Optional[Dict[str, np.ndarray]] = None,
         key = be.name if fuse_loops else be.name + ":nofuse"
         if kernel_variants:
             key += f"|kv={_kv_key(kernel_variants)}"
+        # placement twins share be.name ("mesh"); without a placement
+        # discriminator, alternating placements would thrash the
+        # identity check below into recompiling every call
+        pk = getattr(be, "placement_key", None)
+        if pk:
+            key += f"|mesh={pk!r}"
         fingerprint = hash(tuple(p.ops))   # ops may be mutated by callers
         compiled, fp = cache.get(key, (None, None))
         if compiled is None or compiled.backend is not be \
@@ -276,7 +288,7 @@ def do_load(d: AdvancedLoad, env, stats: ExecStats, be: Backend) -> Any:
         raise PlanExecutionError(
             f"advancedload {d.var!r}: no valid host copy")
     t = time.perf_counter()
-    slot.device = be.upload(slot.host, stream=d.stream)
+    slot.device = be.upload(slot.host, stream=d.stream, name=d.var)
     stats.h2d_time += time.perf_counter() - t
     stats.h2d_transfers += 1
     stats.h2d_bytes += _nbytes(slot.host)
@@ -382,7 +394,7 @@ def _run_block(program: Program, idx: int, env: Dict[str, _Slot],
                     raise PlanExecutionError(
                         f"codelet {blk.name!r} reads {v!r}: not on device "
                         "(missing advancedload)")
-                slot.device = be.upload(slot.host)
+                slot.device = be.upload(slot.host, name=v)
                 slot.valid_device = True
             args.append(slot.device)
         t = time.perf_counter()

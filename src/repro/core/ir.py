@@ -304,6 +304,22 @@ class Plan:
     #       (repro.core.tunecache) answered, and how many execution
     #       classes were measured this call (0 on a hit)
     #   "fuse_loops"/"donate" — how the winning plan wants executing
+    #   "mesh"               — present only when the tuner ran on a
+    #       mesh-capable backend AND a sharded placement won:
+    #       {"shape": [2, 4], "axes": ["data", "model"],
+    #        "placement": "fsdp" | "tp" | "pipeline-registered policy",
+    #        "n_devices": 8,
+    #        "specs": {var: [entry, ...]},   # PartitionSpec entries per
+    #            var; entry is a mesh-axis name, a list of axis names,
+    #            or null (replicated dim); [] = fully replicated
+    #        "dropped": [[var, axis, dim], ...]}  # divisibility-guard
+    #            drops — sharding requests that stayed replicated
+    #       ``execute()`` re-applies it via backend.with_placement();
+    #       ``verify_plan`` validates it (kind "mesh-placement") and
+    #       treats sharded operands as cross-device sync points.  The
+    #       same record also sits at meta["tuning"]["mesh"] for every
+    #       tuned-on-mesh plan (including replicate winners, where the
+    #       top-level key is absent).
     # and by the static plan verifier (repro.core.verify):
     #   "verify"             — {"ok", "checked_ops", "n_errors",
     #       "n_lints", "counts"}: the verifier's verdict for this plan

@@ -13,6 +13,11 @@ own:
                    ONE directive group (single mapbyname space, one
                    release, one transfer stream) — the paper's grouping
                    axis pushed to its endpoint
+    ``pipeline``   optimized placement with every codelet in its OWN
+                   group — the GPipe stage schedule from
+                   ``distributed.pipeline`` expressed as a placement:
+                   per-stage transfer streams and releases so stage
+                   i+1's uploads overlap stage i's compute
 
 ``register_placement`` admits new policies; ``GroupFinalizePass`` emits
 the group declarations (head) and releases (tail) from whatever grouping
@@ -30,8 +35,8 @@ from .linearize import (Insertion, after_hoisted, before_hoisted, merge,
                         pos_of_block)
 
 __all__ = ["PlacementPass", "OptimizedPlacement", "NaivePlacement",
-           "GroupedPlacement", "GroupFinalizePass", "register_placement",
-           "get_placement", "placement_names"]
+           "GroupedPlacement", "PipelinePlacement", "GroupFinalizePass",
+           "register_placement", "get_placement", "placement_names"]
 
 
 class PlacementPass(Pass):
@@ -219,6 +224,28 @@ class GroupedPlacement(OptimizedPlacement):
         return super().place(draft)
 
 
+class PipelinePlacement(OptimizedPlacement):
+    """Optimized placement with every codelet in its own group — the
+    ``distributed.pipeline`` GPipe stage schedule as a placement policy.
+
+    One group per offload block means one mapbyname space, one release
+    and (under ``n_transfer_streams > 1``) one transfer stream per
+    *stage*, so stage i+1's advancedloads overlap stage i's codelet the
+    way GPipe overlaps micro-batch (i+1)'s weights with micro-batch i's
+    forward.  The inverse of ``grouped``: that folds all stages into one
+    group, this splits them maximally."""
+
+    name = "place:pipeline"
+    policy = "pipeline"
+    elide = True
+
+    def place(self, draft: PlanDraft) -> List[Insertion]:
+        blocks = tuple(b.idx for b in draft.program.offload_blocks())
+        draft.groups = {i: (bi,) for i, bi in enumerate(blocks)}
+        draft.group_of = {bi: i for i, bi in enumerate(blocks)}
+        return super().place(draft)
+
+
 class GroupFinalizePass(Pass):
     """Group declarations up front, releases at the end (paper Table 2)."""
 
@@ -257,11 +284,18 @@ _PLACEMENTS: Dict[str, Type[PlacementPass]] = {
 }
 
 
+
+
 def register_placement(name: str,
                        cls: Callable[[], PlacementPass]) -> None:
     """Add a placement policy; it becomes plannable via
     ``plan(p, policy=name)`` and enumerable by the tuner."""
     _PLACEMENTS[name] = cls
+
+
+# the GPipe-derived stage schedule registers through the same admission
+# path any external policy would
+register_placement("pipeline", PipelinePlacement)
 
 
 def get_placement(name: str) -> Type[PlacementPass]:

@@ -56,8 +56,9 @@ __all__ = [
 # Bump whenever predict_cost / offload_cost_terms semantics change: every
 # cached table and every fitted calibration is invalidated by the bump.
 # v1 was the PR-3 tuner (no cache); v2 adds dominance pruning + hw= pricing;
-# v3 adds the kernel-variant axis and the two-level (PCIe + HBM) roofline.
-COST_MODEL_VERSION = 3
+# v3 adds the kernel-variant axis and the two-level (PCIe + HBM) roofline;
+# v4 adds the mesh placement axis and interconnect (ici_bw) cost terms.
+COST_MODEL_VERSION = 4
 
 _ENV_VAR = "REPRO_TUNE_CACHE"
 _MAX_ENV_VAR = "REPRO_TUNE_CACHE_MAX"
@@ -118,11 +119,18 @@ def program_fingerprint(program) -> str:
 
 def backend_fingerprint(backend) -> str:
     """Identity string for the measuring backend: two backends with the
-    same fingerprint must time a plan the same way."""
-    return (f"{type(backend).__name__}:{backend.name}"
-            f":streams{backend.n_streams}"
-            f":donate{getattr(backend, 'donate', False)}"
-            f":{getattr(backend, '_device', None)}")
+    same fingerprint must time a plan the same way.  Mesh backends fold
+    in the mesh shape + axis names — the same program tuned on a 2x4
+    and a 1x8 mesh picks different placements, so the tables must not
+    alias (per-candidate placement is part of the grid, not this)."""
+    fp = (f"{type(backend).__name__}:{backend.name}"
+          f":streams{backend.n_streams}"
+          f":donate{getattr(backend, 'donate', False)}"
+          f":{getattr(backend, '_device', None)}")
+    mesh_key = getattr(backend, "mesh_key", None)
+    if mesh_key:
+        fp += f":mesh{mesh_key}"
+    return fp
 
 
 def grid_fingerprint(configs: Sequence, protocol: Dict[str, Any]) -> str:

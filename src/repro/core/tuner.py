@@ -15,6 +15,15 @@ paper explores —
                          (``repro.kernels.variants``), priced by a
                          per-kernel roofline cutout so ``kernel_s``
                          differs across tile candidates
+    mesh placement       replicate / fsdp / tp per-variable sharding on
+                         placement-capable backends (ISSUE 9,
+                         ``distributed.mesh_backend``): priced off the
+                         post-SPMD HLO (per-device flops + collective
+                         wire bytes against ``ici_bw``), measured on a
+                         ``with_placement`` twin, recorded in
+                         ``meta["mesh"]``; "" (absent) on single-device
+                         backends, whose grid is byte-identical to the
+                         pre-mesh one
 
 — rank them with a static cost model that reuses the roofline machinery
 (``repro.roofline.analysis``: per-block HLO dot-FLOPs, PCIe/HBM
@@ -91,6 +100,10 @@ class PlanConfig:
     # defaults (also the only value for kernel-free programs, keeping
     # labels/fingerprints of the pre-kernel-axis grid unchanged)
     kernel_variants: Tuple[KernelChoice, ...] = ()
+    # mesh placement policy (ISSUE 9): "" on single-device backends
+    # (keeping their labels/fingerprints unchanged), else one of
+    # ``distributed.mesh_backend.DEFAULT_PLACEMENTS``
+    mesh_placement: str = ""
 
     @property
     def label(self) -> str:
@@ -102,6 +115,8 @@ class PlanConfig:
                 f"{k}[{','.join(f'{n}={v}' for n, v in params)}]"
                 for k, params in self.kernel_variants)
             base += "/" + kv
+        if self.mesh_placement:
+            base += "/" + self.mesh_placement
         return base
 
     def as_dict(self) -> Dict[str, Any]:
@@ -130,28 +145,36 @@ def _cfg_from_dict(d: Dict[str, Any]) -> PlanConfig:
     return PlanConfig(**d)
 
 
-DEFAULT_POLICIES: Tuple[str, ...] = ("naive", "optimized", "grouped")
+DEFAULT_POLICIES: Tuple[str, ...] = ("naive", "optimized", "grouped",
+                                     "pipeline")
 DEFAULT_STREAMS: Tuple[int, ...] = (1, 2, 3, 4)
 
 # the hw constants snapshotted into plan.meta["tuning"]["hw"]
-_HW_KEYS = ("pcie_bw", "hbm_bw", "peak_flops_bf16",
+_HW_KEYS = ("pcie_bw", "hbm_bw", "peak_flops_bf16", "ici_bw",
             "launch_overhead_s", "sync_overhead_s")
 
 # every field predict_cost() contributes to a candidate record (what an
 # alias copies from its execution-class survivor)
 _COST_FIELDS = ("h2d_bytes", "d2h_bytes", "loads", "stores", "syncs",
                 "kernel_launches", "dispatches", "flops", "kernel_bytes",
-                "transfer_s", "dispatch_s", "kernel_s", "predicted_s")
+                "coll_bytes", "transfer_s", "dispatch_s", "kernel_s",
+                "collective_s", "predicted_s")
+
+# measurement-derived fields an alias inherits beside measured_s
+_MEASURE_FIELDS = ("measured_kernel_s", "kernel_residual_s")
 
 
 def enumerate_configs(policies: Sequence[str] = DEFAULT_POLICIES,
                       streams: Sequence[int] = DEFAULT_STREAMS,
                       fuse: Sequence[bool] = (True, False),
-                      donate: Sequence[bool] = (False, True)
+                      donate: Sequence[bool] = (False, True),
+                      placements: Sequence[str] = ("",)
                       ) -> List[PlanConfig]:
-    return [PlanConfig(policy=p, n_streams=s, fuse_loops=f, donate=d)
-            for p, s, f, d in itertools.product(policies, streams,
-                                                fuse, donate)]
+    return [PlanConfig(policy=p, n_streams=s, fuse_loops=f, donate=d,
+                       mesh_placement=mp)
+            for p, s, f, d, mp in itertools.product(policies, streams,
+                                                    fuse, donate,
+                                                    placements)]
 
 
 # --------------------------------------------------------------------------
@@ -218,7 +241,8 @@ def _kernel_block_terms(blk, params, shapes,
 def predict_cost(pl: Plan, cfg: PlanConfig,
                  block_flops: Optional[Dict[int, float]] = None,
                  hw: Optional[Dict[str, float]] = None,
-                 shapes: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+                 shapes: Optional[Dict[str, Any]] = None,
+                 mesh: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Walk the plan with loop-trip multipliers and price it:
 
     * transfer bytes  — Σ nbytes(var) × trip multiplier per load/store,
@@ -235,9 +259,14 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
 
     ``hw`` overrides the pricing constants (the tuner passes the
     calibrated set when one is cached for the backend); ``shapes`` is
-    the analyzer's var → ShapeDtypeStruct map.  Returns the counters
-    plus ``offload_cost_terms`` (transfer_s / dispatch_s / kernel_s /
-    predicted_s).
+    the analyzer's var → ShapeDtypeStruct map.  ``mesh`` is one
+    placement's pricing context (``mesh_cost_terms``): per-device block
+    FLOPs replace the single-device ones, each load's bytes scale by the
+    variable's h2d factor (a replicated upload copies to every device),
+    and the blocks' collective wire bytes accumulate into ``coll_bytes``
+    priced against ``ici_bw``.  Returns the counters plus
+    ``offload_cost_terms`` (transfer_s / dispatch_s / kernel_s /
+    collective_s / predicted_s).
     """
     from .compile import fusable_loops
     program = pl.program
@@ -252,6 +281,11 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
     dispatches = 0.0             # physical (fused nests count once)
     flops = 0.0
     kernel_bytes = 0.0
+    coll_bytes = 0.0
+    mesh_flops = (mesh or {}).get("flops_by_block", {})
+    mesh_coll = (mesh or {}).get("coll_by_block", {})
+    h2d_factor = (mesh or {}).get("h2d_factor", {})
+    n_dev = (mesh or {}).get("n_devices", 1)
 
     mult_stack: List[int] = []
     fused_depth = 0
@@ -293,15 +327,18 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
                 flops += kterms["flops"] * m
                 kernel_bytes += kterms["kernel_bytes"] * m
             else:
-                flops += flops_of.get(blk.idx, 0.0) * m
+                flops += mesh_flops.get(blk.idx,
+                                        flops_of.get(blk.idx, 0.0)) * m
                 touched = set(blk.effective_reads()) | set(blk.writes)
                 kernel_bytes += sum(nb.get(v, 0) for v in touched) * m
+            coll_bytes += mesh_coll.get(blk.idx, 0.0) * m
         elif op.kind == "directive":
             d = op.directive
             m = mult()
             if isinstance(d, AdvancedLoad):
                 loads += m
-                h2d_bytes += nb.get(d.var, 0) * m
+                h2d_bytes += nb.get(d.var, 0) * h2d_factor.get(d.var,
+                                                               n_dev) * m
                 dispatches += m
             elif isinstance(d, DelegateStore):
                 stores += m
@@ -311,13 +348,14 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
                 syncs += m
 
     terms = offload_cost_terms(h2d_bytes, d2h_bytes, dispatches, syncs,
-                               flops, kernel_bytes, hw=hw)
+                               flops, kernel_bytes, coll_bytes, hw=hw)
     return {
         "h2d_bytes": int(h2d_bytes), "d2h_bytes": int(d2h_bytes),
         "loads": int(loads), "stores": int(stores), "syncs": int(syncs),
         "kernel_launches": int(kernel_launches),
         "dispatches": float(dispatches), "flops": float(flops),
-        "kernel_bytes": float(kernel_bytes), **terms,
+        "kernel_bytes": float(kernel_bytes),
+        "coll_bytes": float(coll_bytes), **terms,
     }
 
 
@@ -338,22 +376,31 @@ def _measurable(program: Program) -> bool:
                for v in program.inputs.values())
 
 
-def _measure(pl: Plan, cfg: PlanConfig, be: Backend, reps: int) -> float:
+def _measure(pl: Plan, cfg: PlanConfig, be: Backend, reps: int,
+             placement: Any = None) -> Tuple[float, float]:
     from .executor import execute
     # measure on a physically matching backend: cfg.n_streams real
-    # queues (streams 3/4 must not fold onto a 2-queue instance) and
-    # the candidate's donation flag — launching the candidate's kernel
-    # tile sizes
+    # queues (streams 3/4 must not fold onto a 2-queue instance), the
+    # candidate's donation flag, and — on a mesh backend — the
+    # candidate's per-variable placement twin; launching the candidate's
+    # kernel tile sizes.  Returns (wall_time, kernel_time) of the best
+    # rep: the kernel leg feeds the measured-vs-predicted residual that
+    # makes roofline drift visible in the tuning table.
+    mbe = be.variant(n_streams=cfg.n_streams, donate=cfg.donate)
+    if placement is not None and hasattr(mbe, "with_placement"):
+        mbe = mbe.with_placement(placement)
     kw = dict(mode="compiled", fuse_loops=cfg.fuse_loops,
               kernel_variants=cfg.variants_map() or None,
-              backend=be.variant(n_streams=cfg.n_streams,
-                                 donate=cfg.donate))
+              backend=mbe)
     execute(pl, **kw)                       # warm jits + plan lowering
     best = float("inf")
+    best_kernel = 0.0
     for _ in range(max(1, reps)):
         _, s = execute(pl, **kw)
-        best = min(best, s.wall_time)       # steady-state, compile excluded
-    return best
+        if s.wall_time < best:              # steady-state, compile excluded
+            best = s.wall_time
+            best_kernel = s.kernel_time
+    return best, best_kernel
 
 
 def winner_exec_kwargs(pl: Plan, backend: Any = None) -> Dict[str, Any]:
@@ -393,7 +440,8 @@ def _calibrate(rows: List[Dict[str, Any]],
     for r in rows:
         r["calibrated_s"] = offload_cost_terms(
             r["h2d_bytes"], r["d2h_bytes"], r["dispatches"], r["syncs"],
-            r["flops"], r["kernel_bytes"], hw=hw2)["predicted_s"]
+            r["flops"], r["kernel_bytes"], r.get("coll_bytes", 0.0),
+            hw=hw2)["predicted_s"]
     after = rank_correlation([r["calibrated_s"] for r in rows],
                              [r["measured_s"] for r in rows])
     record.update(fitted=fitted, rank_corr_after=after,
@@ -429,12 +477,15 @@ def _cached_plan(program: Program, an: ProgramAnalysis, tuning: Dict,
     cfg = _cfg_from_dict(chosen["config"])
     pl = Pipeline.default(cfg.policy, n_streams=cfg.n_streams
                           ).run(program, analysis=an)
+    mesh_rec = tuning.get("mesh")
     report = verify_plan(pl, donate=cfg.donate and be.supports_donation,
                          kernel_variants=cfg.variants_map() or None,
-                         shapes=an.shapes)
+                         shapes=an.shapes, mesh=mesh_rec)
     pl.meta["verify"] = report.meta_record()
     report.raise_if_failed()
     pl.meta["tuning"] = tuning
+    if mesh_rec is not None:
+        pl.meta["mesh"] = mesh_rec
     pl.meta["fuse_loops"] = cfg.fuse_loops
     pl.meta["donate"] = cfg.donate
     pl.meta["kernel_variants"] = cfg.variants_map()
@@ -442,6 +493,21 @@ def _cached_plan(program: Program, an: ProgramAnalysis, tuning: Dict,
     pl.meta["tuning_cache"] = {"hit": True, "measurements": 0,
                                "path": str(tc.path), "fingerprint": fp}
     return pl
+
+
+def _mesh_record(be: Backend, ctx: Dict[str, Any]) -> Dict[str, Any]:
+    """JSON-safe ``meta["mesh"]`` record for one placement context (what
+    the verifier checks, ``execute()`` re-applies via ``with_placement``,
+    and the tunecache round-trips)."""
+    shape, axes = be.mesh_desc
+    return {
+        "shape": list(shape),
+        "axes": list(axes),
+        "placement": ctx["placement"],
+        "n_devices": int(ctx["n_devices"]),
+        "specs": {v: list(e) for v, e in ctx["specs"].items()},
+        "dropped": [list(d) for d in ctx["dropped"]],
+    }
 
 
 def _kernel_variant_combos(program: Program,
@@ -481,6 +547,7 @@ def tune(program: Program, *, backend: Any = None,
          streams: Sequence[int] = DEFAULT_STREAMS,
          fuse: Sequence[bool] = (True, False),
          donate: Sequence[bool] = (False, True),
+         placements: Optional[Sequence[str]] = None,
          configs: Optional[Sequence[PlanConfig]] = None,
          measure: bool = True, top_k: Optional[int] = None,
          reps: int = 2, cache: Any = None, refresh: bool = False,
@@ -526,10 +593,34 @@ def tune(program: Program, *, backend: Any = None,
     from .compile import fusable_loops
     an = analysis or analyze(program)
     be = get_backend(backend)
+    # -- mesh placement axis (ISSUE 9): only on placement-capable backends --
+    mesh_capable = (hasattr(be, "with_placement")
+                    and getattr(be, "mesh_desc", None) is not None)
+    if placements is None:
+        if mesh_capable:
+            from repro.distributed.mesh_backend import DEFAULT_PLACEMENTS
+            placements = DEFAULT_PLACEMENTS
+        else:
+            placements = ("",)   # single-device grid: unchanged labels/fps
     cfg_list = list(configs) if configs is not None else enumerate_configs(
-        policies, streams, fuse, donate)
+        policies, streams, fuse, donate, placements)
     if not cfg_list:
         raise ValueError("tune() needs at least one candidate config")
+
+    # per-placement pricing context: specs through the divisibility-
+    # guarded sharding rules, per-device flops + collective wire bytes
+    # off the post-SPMD HLO, PCIe replication factors
+    mesh_ctx: Dict[str, Dict[str, Any]] = {}
+    if mesh_capable:
+        from repro.distributed.mesh_backend import (mesh_cost_terms,
+                                                    placement_specs)
+        for pol in sorted({c.mesh_placement for c in cfg_list
+                           if c.mesh_placement}):
+            specs, dropped = placement_specs(an.shapes, be.mesh, pol)
+            ctx = mesh_cost_terms(program, an.shapes, be, specs)
+            ctx["placement"] = pol
+            ctx["dropped"] = dropped
+            mesh_ctx[pol] = ctx
 
     # -- kernel axis: cross the grid with per-kernel tile variants ----------
     combos = _kernel_variant_combos(program, an)
@@ -612,8 +703,10 @@ def tune(program: Program, *, backend: Any = None,
         # (dominance pruning).
         eff_fuse = cfg.fuse_loops and bool(fusable_loops(pl))
         eff_donate = cfg.donate and be.supports_donation
-        key = (tuple(pl.ops), eff_fuse, eff_donate, cfg.kernel_variants)
+        key = (tuple(pl.ops), eff_fuse, eff_donate, cfg.kernel_variants,
+               cfg.mesh_placement)
         survivor = classes.get(key)
+        cfg_mesh = mesh_ctx.get(cfg.mesh_placement)
         if survivor is None:
             # every execution class is statically vetted BEFORE it is
             # priced or measured: a candidate the verifier rejects is
@@ -623,7 +716,9 @@ def tune(program: Program, *, backend: Any = None,
             # so aliases inherit the survivor's verdict.
             vrep = verify_plan(pl, donate=eff_donate,
                                kernel_variants=cfg.variants_map() or None,
-                               shapes=an.shapes, collect_lints=False)
+                               shapes=an.shapes, collect_lints=False,
+                               mesh=(_mesh_record(be, cfg_mesh)
+                                     if cfg_mesh else None))
             if not vrep.ok:
                 base.update(valid=False, error="verifier: " + "; ".join(
                     str(v) for v in vrep.errors[:3]))
@@ -633,7 +728,7 @@ def tune(program: Program, *, backend: Any = None,
             if flops_cache is None:
                 flops_cache = _block_flops(program, an.shapes)
             base.update(predict_cost(pl, cfg, flops_cache, hw=pricing_hw,
-                                     shapes=an.shapes))
+                                     shapes=an.shapes, mesh=cfg_mesh))
             classes[key] = base
             plans[cfg.label] = pl
         else:
@@ -662,7 +757,15 @@ def tune(program: Program, *, backend: Any = None,
                       else survivors[:max(1, top_k)])
         for r in to_measure:
             cfg = _cfg_from_dict(r["config"])
-            r["measured_s"] = _measure(plans[r["label"]], cfg, be, reps)
+            ctx = mesh_ctx.get(cfg.mesh_placement)
+            wall, kern = _measure(plans[r["label"]], cfg, be, reps,
+                                  placement=(ctx["specs"] if ctx else None))
+            r["measured_s"] = wall
+            # roofline drift per variant: measured kernel leg vs the
+            # analytic kernel_s the ranking used (0 residual on backends
+            # that don't time kernels, e.g. interpreted numpy)
+            r["measured_kernel_s"] = kern
+            r["kernel_residual_s"] = kern - r["kernel_s"]
             n_measured += 1
 
     # -- calibration (on the measured survivors, before alias fan-out) ------
@@ -681,6 +784,9 @@ def tune(program: Program, *, backend: Any = None,
             survivor = by_label[r["alias_of"]]
             r["measured_s"] = survivor["measured_s"]
             r["calibrated_s"] = survivor["calibrated_s"]
+            for k in _MEASURE_FIELDS:
+                if k in survivor:
+                    r[k] = survivor[k]
 
     measured = [r for r in valid if r["measured_s"] is not None]
     # ties (merged classes share a value) resolve to the best rank,
@@ -690,23 +796,29 @@ def tune(program: Program, *, backend: Any = None,
 
     chosen_cfg = _cfg_from_dict(chosen["config"])
     best = plans[chosen["alias_of"] or chosen["label"]]
+    chosen_mesh = (
+        _mesh_record(be, mesh_ctx[chosen_cfg.mesh_placement])
+        if chosen_cfg.mesh_placement in mesh_ctx else None)
     best.meta["tuning"] = {
         "chosen": chosen["label"],
         "backend": be.name,
         "hw": {k: pricing_hw[k] for k in _HW_KEYS},
         "calibration": calibration,
         "kernel_variants": chosen_cfg.variants_map(),
+        "mesh": chosen_mesh,
         "pruned_invalid": sum(
             1 for r in records
             if not r["valid"] and str(r["error"]).startswith("verifier:")),
         "candidates": valid + [r for r in records if not r["valid"]],
     }
+    if chosen_mesh is not None:
+        best.meta["mesh"] = chosen_mesh
     # the winner's full verdict (lints included) — the per-class vet
     # above ran error-only
     vrep = verify_plan(
         best, donate=chosen["config"]["donate"] and be.supports_donation,
         kernel_variants=chosen_cfg.variants_map() or None,
-        shapes=an.shapes)
+        shapes=an.shapes, mesh=chosen_mesh)
     best.meta["verify"] = vrep.meta_record()
     best.meta["fuse_loops"] = chosen["config"]["fuse_loops"]
     best.meta["donate"] = chosen["config"]["donate"]

@@ -57,6 +57,16 @@ Violation taxonomy (``Violation.kind``):
                           a tile the registry (``kernels/variants``)
                           rejects for its operand shapes, or an unknown
                           kernel name
+    ``mesh-placement``    error — a sharded plan whose placement record
+                          is inconsistent: a spec naming a variable the
+                          program does not have, a mesh axis the mesh
+                          does not declare, a sharded dim the axis size
+                          does not divide (the divisibility guard
+                          should have dropped it), or a
+                          divisibility-guard drop whose variable then
+                          has no spec at all (a drop must leave the
+                          var explicitly replicated, never a placement
+                          gap)
     ``redundant-directive``LINT — duplicate uploads, dead stores,
                           uploads of never-device-read vars (the
                           paper's 3MM "E needs no upload" insight,
@@ -92,7 +102,7 @@ __all__ = ["Violation", "VerifyReport", "PlanVerificationError",
 VIOLATION_KINDS = (
     "async-race", "stale-host-read", "use-after-release",
     "use-after-donation", "placement-gap", "illegal-kernel-tile",
-    "redundant-directive", "malformed",
+    "mesh-placement", "redundant-directive", "malformed",
 )
 
 
@@ -268,6 +278,77 @@ def _check_kernel_tiles(p: Plan, kernel_variants, shapes, emit) -> None:
                  f"shapes {op_shapes} (non-dividing after clamping)")
 
 
+def _check_mesh_placement(p: Plan, mesh: Dict[str, Any],
+                          shapes: Optional[Dict[str, Any]], emit) -> set:
+    """Validate a sharded plan's placement record (``meta["mesh"]``).
+
+    The record is the plain-JSON dict ``tuner._mesh_record`` writes —
+    ``shape``/``axes`` (the mesh), ``specs`` (var → PartitionSpec
+    entries) and ``dropped`` (the divisibility-guard log) — so this
+    stays jax-free.  Returns the set of *sharded* variables (any
+    non-None spec entry): the state walk treats consuming a sharded
+    operand as a cross-device sync point.
+    """
+    end = len(p.ops)
+    sizes = dict(zip(tuple(mesh.get("axes") or ()),
+                     tuple(mesh.get("shape") or ())))
+    specs = mesh.get("specs") or {}
+    program = p.program
+    known = set(program.inputs)
+    for blk in program.blocks:
+        known.update(blk.reads)
+        known.update(blk.writes)
+    if shapes:
+        known.update(shapes)
+    sharded: set = set()
+    for var, entries in sorted(specs.items()):
+        if var not in known:
+            emit("mesh-placement", "error", end, var,
+                 f"placement spec names {var!r}, which no program block "
+                 "reads or writes and no input binds")
+            continue
+        dims = None
+        sv = (shapes or {}).get(var)
+        if sv is not None and hasattr(sv, "shape"):
+            dims = tuple(sv.shape)
+        entries = tuple(entries or ())
+        if dims is not None and len(entries) > len(dims):
+            emit("mesh-placement", "error", end, var,
+                 f"spec {entries!r} has more entries than {var!r}'s "
+                 f"rank {len(dims)}")
+            continue
+        for d, e in enumerate(entries):
+            if e is None:
+                continue
+            names = tuple(e) if isinstance(e, (list, tuple)) else (e,)
+            factor, bad = 1, False
+            for a in names:
+                if a not in sizes:
+                    emit("mesh-placement", "error", end, var,
+                         f"spec shards {var!r} dim {d} over mesh axis "
+                         f"{a!r}, which mesh {sizes!r} does not declare")
+                    bad = True
+                    break
+                factor *= int(sizes[a])
+            if bad:
+                continue
+            sharded.add(var)
+            if dims is not None and factor and dims[d] % factor != 0:
+                emit("mesh-placement", "error", end, var,
+                     f"spec shards {var!r} dim {d} (size {dims[d]}) over "
+                     f"{names!r} ({factor} shards), which does not divide "
+                     "it — the divisibility guard should have dropped "
+                     "this entry")
+    for rec in (mesh.get("dropped") or ()):
+        ctx = rec[0] if rec else None
+        if ctx is not None and str(ctx) not in specs:
+            emit("mesh-placement", "error", end, str(ctx),
+                 f"divisibility guard dropped an axis of {ctx!r} but the "
+                 "placement carries no spec for it at all — a drop must "
+                 "leave the var explicitly replicated, not a gap")
+    return sharded
+
+
 # --------------------------------------------------------------------------
 # The verifier walk.
 # --------------------------------------------------------------------------
@@ -275,7 +356,8 @@ def _check_kernel_tiles(p: Plan, kernel_variants, shapes, emit) -> None:
 def verify_plan(p: Plan, *, donate: Optional[bool] = None,
                 kernel_variants: Optional[Dict[str, Dict[str, int]]] = None,
                 shapes: Optional[Dict[str, Any]] = None,
-                collect_lints: bool = True) -> VerifyReport:
+                collect_lints: bool = True,
+                mesh: Optional[Dict[str, Any]] = None) -> VerifyReport:
     """Statically verify ``p``; returns a ``VerifyReport`` (never raises
     for plan defects — call ``.raise_if_failed()`` for the hard-error
     contract).
@@ -293,6 +375,13 @@ def verify_plan(p: Plan, *, donate: Optional[bool] = None,
     ``collect_lints``     False skips the redundancy lints (the tuner
                           verifies many candidates and only needs the
                           error verdict)
+    ``mesh``              a sharded plan's placement record (the
+                          ``meta["mesh"]`` dict written by the tuner:
+                          shape/axes/specs/dropped); None → the plan's
+                          own ``meta["mesh"]``.  When present, specs
+                          are validated (``mesh-placement``) and a
+                          sharded operand's consumption counts as a
+                          cross-device sync point in the race walk
     """
     program = p.program
     ops = p.ops
@@ -312,6 +401,8 @@ def verify_plan(p: Plan, *, donate: Optional[bool] = None,
         donate = bool(p.meta.get("donate", False))
     if kernel_variants is None:
         kernel_variants = p.meta.get("kernel_variants") or {}
+    if mesh is None:
+        mesh = p.meta.get("mesh")
     n_streams = int(p.meta.get("n_transfer_streams", 0) or 0)
 
     # -- structural pass (malformed plans do not get a state walk) ----------
@@ -360,6 +451,9 @@ def verify_plan(p: Plan, *, donate: Optional[bool] = None,
 
     shapes = shapes or _input_shapes(p)
     _check_kernel_tiles(p, kernel_variants, shapes, emit)
+    sharded_vars: set = set()
+    if mesh:
+        sharded_vars = _check_mesh_placement(p, mesh, shapes, emit)
 
     # -- abstract state -----------------------------------------------------
     state: Dict[str, _VarState] = {
@@ -482,6 +576,13 @@ def verify_plan(p: Plan, *, donate: Optional[bool] = None,
                         if vstate(v).inflight is not None}
             for v in sorted(reads):
                 st = vstate(v)
+                # a sharded operand's dispatch waits on every shard of
+                # the distributed upload before the SPMD computation
+                # (and its collectives) can run: the collective is a
+                # cross-device sync point, so the in-flight DMA cannot
+                # race the read
+                if v in sharded_vars:
+                    st.inflight = None
                 if st.inflight is not None:
                     emit("async-race", "error", i, v,
                          f"codelet {blk.name!r} reads {v!r} while its "

@@ -340,34 +340,43 @@ def analytic_hbm_bytes(cfg, shape, n_devices: int, *,
 def offload_cost_terms(h2d_bytes: float, d2h_bytes: float,
                        dispatches: float, syncs: float,
                        flops: float, kernel_bytes: float,
+                       coll_bytes: float = 0.0,
                        hw: Optional[Dict[str, float]] = None
                        ) -> Dict[str, float]:
     """Static cost terms for one offload-plan execution — the roofline
     model applied to the planner's schedule (used by ``repro.core.tuner``
     to rank candidate plans):
 
-        transfer_s  = (h2d + d2h bytes) / pcie_bw
-        dispatch_s  = launch_overhead × dispatches + sync_overhead × syncs
-        kernel_s    = max(flops / peak, kernel HBM bytes / hbm_bw)
+        transfer_s   = (h2d + d2h bytes) / pcie_bw
+        dispatch_s   = launch_overhead × dispatches + sync_overhead × syncs
+        kernel_s     = max(flops / peak, kernel HBM bytes / hbm_bw)
+        collective_s = collective wire bytes / ici_bw
 
-    ``predicted_s`` sums the three: transfers on this machine are NOT
+    ``predicted_s`` sums the four: transfers on this machine are NOT
     overlapped with the modelled kernel time (the plan's async streams
     overlap them with *host* work), so a sum — not a max — ranks
     correctly.  Since the kernel tuning axis (ISSUE 6), ``kernel_s`` is
     no longer plan-invariant: kernel-tagged blocks are priced per tile
     variant via ``kernel_roofline_terms``, so the HBM/flops legs of the
-    roofline carry cross-candidate signal too."""
+    roofline carry cross-candidate signal too.  Since the mesh placement
+    axis (ISSUE 9), ``coll_bytes`` carries the ring-volume bytes of the
+    collectives GSPMD inserts for a sharded placement
+    (``collective_bytes`` over the per-device HLO), priced against the
+    inter-chip interconnect beside the PCIe leg; single-device plans
+    leave it 0 and the term vanishes."""
     h = hw or HW
     transfer_s = (h2d_bytes + d2h_bytes) / h["pcie_bw"]
     dispatch_s = (h["launch_overhead_s"] * dispatches
                   + h["sync_overhead_s"] * syncs)
     kernel_s = max(flops / h["peak_flops_bf16"],
                    kernel_bytes / h["hbm_bw"])
+    collective_s = coll_bytes / h["ici_bw"]
     return {
         "transfer_s": transfer_s,
         "dispatch_s": dispatch_s,
         "kernel_s": kernel_s,
-        "predicted_s": transfer_s + dispatch_s + kernel_s,
+        "collective_s": collective_s,
+        "predicted_s": transfer_s + dispatch_s + kernel_s + collective_s,
     }
 
 
@@ -398,9 +407,11 @@ def kernel_roofline_terms(kernel: str, variant, shapes,
 # OpenMP-Advisor observation: calibrated beats fixed for offload
 # decisions).  Since the kernel tuning axis (ISSUE 6), tile variants make
 # kernel_s vary across candidates, so the HBM/flops roofline legs are
-# identifiable too and join the fit.
+# identifiable too and join the fit.  Since the mesh placement axis
+# (ISSUE 9), sharded candidates carry collective wire bytes, making the
+# interconnect rate identifiable the same way.
 CALIBRATABLE = ("pcie_bw", "launch_overhead_s", "sync_overhead_s",
-                "hbm_bw", "peak_flops_bf16")
+                "hbm_bw", "peak_flops_bf16", "ici_bw")
 
 # clamp ranges keeping a degenerate fit physical: bandwidths within
 # [100 MB/s, 100 TB/s], per-event overheads within [0, 100 ms],
@@ -411,10 +422,11 @@ _FIT_BOUNDS = {
     "sync_overhead_s": (0.0, 0.1),
     "hbm_bw": (1e8, 1e14),
     "peak_flops_bf16": (1e9, 1e18),
+    "ici_bw": (1e8, 1e14),
 }
 
 # design-matrix column order for the joint fit
-_FIT_COLS = ("pcie", "dispatches", "syncs", "flops", "kbytes")
+_FIT_COLS = ("pcie", "dispatches", "syncs", "flops", "kbytes", "coll")
 
 
 def _lstsq_cols(cols, y):
@@ -475,6 +487,7 @@ def fit_offload_constants(rows, hw: Optional[Dict[str, float]] = None
     flops = np.array([r.get("flops", 0.0) or 0.0 for r in rows], float)
     kbytes = np.array([r.get("kernel_bytes", 0.0) or 0.0
                        for r in rows], float)
+    coll = np.array([r.get("coll_bytes", 0.0) or 0.0 for r in rows], float)
     y = np.array([r["measured_s"] for r in rows], float)
 
     # arithmetic intensity; bytes-free compute rows pin to the compute
@@ -492,6 +505,7 @@ def fit_offload_constants(rows, hw: Optional[Dict[str, float]] = None
             "pcie": pcie, "dispatches": disp, "syncs": sync,
             "flops": np.where(compute, flops, 0.0),
             "kbytes": np.where(compute, 0.0, kbytes),
+            "coll": coll,
         }
         out = _lstsq_cols(cols, y)
         if out is not None and (best is None or out[1] < best[1]):
@@ -511,6 +525,7 @@ def fit_offload_constants(rows, hw: Optional[Dict[str, float]] = None
         "sync_overhead_s": coef.get("syncs", h["sync_overhead_s"]),
         "peak_flops_bf16": _rate("flops", h["peak_flops_bf16"]),
         "hbm_bw": _rate("kbytes", h["hbm_bw"]),
+        "ici_bw": _rate("coll", h["ici_bw"]),
     }
     for k, (lo, hi) in _FIT_BOUNDS.items():
         fitted[k] = float(min(max(fitted[k], lo), hi))

@@ -14,10 +14,12 @@ def run_py(body: str, timeout=560):
             "os.environ['XLA_FLAGS'] = "
             "'--xla_force_host_platform_device_count=8'\n"
             + textwrap.dedent(body))
+    # JAX_PLATFORMS=cpu: without it jax probes for a TPU backend first
+    # (minutes of metadata-server retries on a non-TPU host)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=timeout,
                        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     return r.stdout
 

@@ -1,0 +1,191 @@
+"""ISSUE 9 end-to-end: mesh-aware plan generation on forced fake devices.
+
+Each test runs in a subprocess with ``--xla_force_host_platform_device_count``
+so the main pytest process keeps its single CPU device.  Tier-1 deselects
+this file (like the distributed subprocess tests); the dedicated CI mesh
+job runs it under 8 fake devices.
+
+The measured sharded-beats-single-device gate is ADAPTIVE: 8 fake CPU
+devices time-slice the host's cores, so sharding can only win wall-clock
+when there is real parallel silicon underneath.  With >= 2 cores
+(the CI runners) the gate is strict; on a 1-core host the test still
+requires the tuner to *select* a sharded placement, beat the
+replicated-on-mesh baseline, and verify + cache-roundtrip cleanly.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def run_py(body: str, n_devices: int = 8, timeout=560, env=None):
+    code = ("import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={n_devices}'\n"
+            + textwrap.dedent(body))
+    # JAX_PLATFORMS=cpu: without it jax probes for a TPU backend first
+    # (minutes of metadata-server retries on a non-TPU host)
+    full_env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/root",
+                "JAX_PLATFORMS": "cpu"}
+    full_env.update(env or {})
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=full_env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_mesh_tune_selects_sharded_plan_and_caches(tmp_path):
+    """The acceptance gate: plan(p, policy="auto") on the mesh backend
+    picks a sharded placement, the winner verifies clean, beats the
+    replicated-on-mesh plan, beats the single-device plan when the host
+    has parallel cores, and the warm cache answers the repeat call with
+    zero measurements."""
+    out = run_py("""
+        import json, os
+        from repro.polybench import build
+        from repro.core import plan, execute, run_host_oracle, verify_plan
+        from repro.core.backend import get_backend
+        import numpy as np
+
+        p, _ = build("3mm", n=256)
+        be = get_backend("mesh")
+        assert be.n_devices == 8, be.mesh_desc
+
+        tuned = plan(p, policy="auto", backend=be, reps=1)
+        tuning = tuned.meta["tuning"]
+        mesh_rec = tuned.meta.get("mesh")
+        assert mesh_rec is not None, tuning["chosen"]
+        assert mesh_rec["placement"] in ("fsdp", "tp"), mesh_rec
+        assert any(e for e in mesh_rec["specs"].values()
+                   if any(x is not None for x in e)), mesh_rec
+
+        # the winner verifies clean (collective = sync point, no gaps)
+        rep = verify_plan(tuned)
+        assert rep.ok, rep.summary()
+
+        # sharded winner beats the replicated-on-mesh plan, measured
+        meas = [c for c in tuning["candidates"]
+                if c["valid"] and c.get("measured_s") is not None]
+        chosen = next(c for c in meas if c["label"] == tuning["chosen"])
+        repl = [c for c in meas
+                if c["config"]["mesh_placement"] == "replicate"]
+        assert repl and chosen["measured_s"] <= min(
+            c["measured_s"] for c in repl), (
+            chosen["measured_s"], min(c["measured_s"] for c in repl))
+
+        # kernel_s residuals recorded for every measured candidate
+        assert all(c.get("measured_kernel_s") is not None
+                   and c.get("kernel_residual_s") is not None
+                   for c in meas)
+
+        # the sharded plan executes correctly through the mesh backend
+        out_m, _ = execute(tuned, backend=be)
+        oracle = run_host_oracle(p)
+        # sharded reductions reassociate the accumulation: tolerance
+        # covers the collective's summation-order drift, nothing more
+        np.testing.assert_allclose(np.asarray(out_m["out"]), oracle["out"],
+                                   rtol=2e-3)
+
+        # single-device comparison
+        p1, _ = build("3mm", n=256)
+        single = plan(p1, policy="auto", backend="jax", reps=1)
+        s_meas = min(c["measured_s"]
+                     for c in single.meta["tuning"]["candidates"]
+                     if c["valid"] and c.get("measured_s") is not None)
+        n_cores = len(os.sched_getaffinity(0))
+        ratio = s_meas / chosen["measured_s"]
+        print("RATIO", json.dumps({"cores": n_cores, "ratio": ratio}))
+        if n_cores >= 2:
+            assert ratio > 1.0, (
+                f"sharded plan must beat single-device on {n_cores} "
+                f"cores: {chosen['measured_s']} vs {s_meas}")
+
+        # warm cache: repeat call answers with zero measurements
+        p2, _ = build("3mm", n=256)
+        tuned2 = plan(p2, policy="auto", backend=be, reps=1)
+        ci = tuned2.meta["tuning_cache"]
+        assert ci["hit"] is True and ci["measurements"] == 0, ci
+        assert tuned2.meta.get("mesh") == mesh_rec
+        print("MESH_TUNE_OK")
+    """, env={"REPRO_TUNE_CACHE": str(tmp_path / "tc")})
+    assert "MESH_TUNE_OK" in out
+    info = json.loads(out.split("RATIO", 1)[1].splitlines()[0])
+    assert info["ratio"] > 0
+
+
+def test_mesh_fingerprint_separates_mesh_shapes(tmp_path):
+    """The same program tuned on a 2x4 and a 1x8 mesh must not alias in
+    the tunecache (mesh shape is part of the backend fingerprint)."""
+    out = run_py("""
+        from repro.polybench import build
+        from repro.core import plan
+        from repro.distributed.mesh_backend import MeshBackend
+        from repro.core.tunecache import backend_fingerprint
+
+        be_a = MeshBackend(shape=(2, 4))
+        be_b = MeshBackend(shape=(1, 8))
+        assert backend_fingerprint(be_a) != backend_fingerprint(be_b)
+
+        p, _ = build("gemm", n=64, iters=2)
+        pl_a = plan(p, policy="auto", backend=be_a, reps=1)
+        assert pl_a.meta["tuning_cache"]["hit"] is False
+        p2, _ = build("gemm", n=64, iters=2)
+        pl_b = plan(p2, policy="auto", backend=be_b, reps=1)
+        assert pl_b.meta["tuning_cache"]["hit"] is False   # no aliasing
+        p3, _ = build("gemm", n=64, iters=2)
+        pl_a2 = plan(p3, policy="auto", backend=MeshBackend(shape=(2, 4)),
+                     reps=1)
+        assert pl_a2.meta["tuning_cache"]["hit"] is True   # same mesh hits
+        print("MESH_FP_OK")
+    """, env={"REPRO_TUNE_CACHE": str(tmp_path / "tc")})
+    assert "MESH_FP_OK" in out
+
+
+def test_16way_model_axis_specs_all_jit_valid():
+    """Satellite: qwen2.5's 40 q-heads and arctic's 56-way dim on a
+    16-way model axis stay unsharded with the drop recorded, and every
+    PartitionSpec placement_specs produces actually jits."""
+    out = run_py("""
+        import jax, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+        from repro.distributed.mesh_backend import placement_specs
+        from repro.configs import get_config
+
+        devs = jax.devices()
+        assert len(devs) == 16
+        mesh = Mesh(np.asarray(devs).reshape(1, 16), ("data", "model"))
+        q = get_config("qwen2.5-14b")
+        a = get_config("arctic-480b")
+        assert q.n_heads == 40 and a.n_heads == 56
+        shapes = {
+            "w_q": jax.ShapeDtypeStruct((q.d_model, q.n_heads * q.d_head),
+                                        np.float32),
+            "heads40": jax.ShapeDtypeStruct((128, q.n_heads), np.float32),
+            "heads56": jax.ShapeDtypeStruct((64, a.n_heads), np.float32),
+            "experts128": jax.ShapeDtypeStruct((64, a.n_experts),
+                                               np.float32),
+            "scalar": jax.ShapeDtypeStruct((), np.float32),
+        }
+        for policy in ("replicate", "fsdp", "tp"):
+            specs, dropped = placement_specs(shapes, mesh, policy)
+            assert set(specs) == set(shapes)       # no placement gaps
+            if policy == "tp":
+                # 40 % 16 and 56 % 16 != 0: the dim stays unsharded
+                assert specs["heads40"][-1] is None
+                assert specs["heads56"][-1] is None
+                assert specs["experts128"][-1] == "model"  # 128 shards
+                dropped_vars = {d[0] for d in dropped}
+                assert {"heads40", "heads56"} <= dropped_vars
+            # every spec jit-compiles with in_shardings on this mesh
+            # (one lowering per policy: all vars as one argument list)
+            order = sorted(specs)
+            shs = [NamedSharding(mesh, PartitionSpec(*specs[v]))
+                   for v in order]
+            fn = jax.jit(lambda *xs: xs, in_shardings=shs)
+            fn.lower(*[shapes[v] for v in order]).compile()
+        print("JIT_VALID_OK")
+    """, n_devices=16)
+    assert "JIT_VALID_OK" in out

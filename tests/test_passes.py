@@ -60,7 +60,8 @@ class TestPipelineParity:
 
 class TestPolicyRegistry:
     def test_builtin_policies_registered(self):
-        assert {"optimized", "naive", "grouped"} <= set(placement_names())
+        assert {"optimized", "naive", "grouped",
+                "pipeline"} <= set(placement_names())
         assert get_placement("optimized") is OptimizedPlacement
         assert get_placement("naive") is NaivePlacement
 
@@ -108,6 +109,22 @@ class TestPolicyRegistry:
             np.testing.assert_array_equal(out_d[k], out_g[k])
         assert s_d.transfer_counts()["h2d_transfers"] == \
             s_g.transfer_counts()["h2d_transfers"]
+
+    def test_pipeline_policy_one_group_per_stage(self):
+        """ISSUE 9: the GPipe-derived policy puts every codelet in its
+        own group — 3mm's three matmuls become three stages with three
+        releases — and still computes the same answer."""
+        p, _ = build_3mm(n=16)
+        pipe = plan(p, policy="pipeline")
+        assert pipe.meta["policy"] == "pipeline"
+        n_stages = len(list(p.offload_blocks()))
+        assert len(pipe.groups) == n_stages == 3
+        assert all(len(blks) == 1 for blks in pipe.groups.values())
+        assert len(pipe.directives(GroupDecl)) == n_stages
+        assert len(pipe.directives(Release)) == n_stages
+        out, _ = execute(pipe, backend="numpy")
+        oracle = run_host_oracle(p)
+        np.testing.assert_allclose(out["out"], oracle["out"], rtol=1e-5)
 
 
 class TestDeterminism:

@@ -1,6 +1,7 @@
 """Unit tests for the roofline HLO analysis: while-loop trip-count
 multipliers, ring-volume collective accounting, dot-FLOP counting."""
 import numpy as np
+import pytest
 
 from repro.configs import SHAPES, get_config
 from repro.roofline.analysis import (analytic_hbm_bytes, analytic_model_flops,
@@ -103,3 +104,47 @@ def test_roofline_terms_bottleneck_selection():
     assert out["bottleneck"] in ("compute_s", "memory_s", "collective_s")
     assert 0 <= out["roofline_fraction"]
     assert out["model_flops"] > 0
+
+
+def test_offload_cost_terms_price_collectives():
+    """ISSUE 9: wire bytes of GSPMD collectives are priced against
+    ici_bw beside the PCIe terms and added to the predicted sum."""
+    from repro.roofline.analysis import HW, offload_cost_terms
+    base = offload_cost_terms(1e6, 1e6, 2, 1, 1e9, 1e7)
+    with_coll = offload_cost_terms(1e6, 1e6, 2, 1, 1e9, 1e7,
+                                   coll_bytes=5e8)
+    assert base["collective_s"] == 0.0
+    assert with_coll["collective_s"] == 5e8 / HW["ici_bw"]
+    assert with_coll["predicted_s"] - base["predicted_s"] == \
+        with_coll["collective_s"]
+    fast = offload_cost_terms(1e6, 1e6, 2, 1, 1e9, 1e7, coll_bytes=5e8,
+                              hw={**HW, "ici_bw": HW["ici_bw"] * 10})
+    assert fast["collective_s"] < with_coll["collective_s"]
+
+
+def test_fit_recovers_ici_bw():
+    """fit_offload_constants must recover the interconnect bandwidth
+    from rows whose times were synthesized with a known ici_bw."""
+    from repro.roofline.analysis import HW, fit_offload_constants
+    rng = np.random.default_rng(0)
+    true = dict(HW)
+    true["ici_bw"] = 7.5e9
+    rows = []
+    for _ in range(40):
+        pcie = float(rng.uniform(1e6, 1e9))
+        disp = int(rng.integers(1, 20))
+        syncs = int(rng.integers(0, 10))
+        flops = float(rng.uniform(1e8, 1e12))
+        kb = float(rng.uniform(1e6, 1e9))
+        coll = float(rng.uniform(1e6, 1e9))
+        t = (pcie / true["pcie_bw"]
+             + disp * true["launch_overhead_s"]
+             + syncs * true["sync_overhead_s"]
+             + max(flops / true["peak_flops_bf16"], kb / true["hbm_bw"])
+             + coll / true["ici_bw"])
+        rows.append({"h2d_bytes": pcie / 2, "d2h_bytes": pcie / 2,
+                     "dispatches": disp, "syncs": syncs, "flops": flops,
+                     "kernel_bytes": kb, "coll_bytes": coll,
+                     "measured_s": t})
+    fitted = fit_offload_constants(rows)
+    assert fitted["ici_bw"] == pytest.approx(7.5e9, rel=0.05)

@@ -65,6 +65,56 @@ def test_batch_axes_multipod():
     assert batch_axes(_mesh()) == ("data",)
 
 
+def test_qwen25_qheads_unsharded_on_16way_model():
+    """qwen2.5-14b's 40 q-heads on a 16-way model axis: 40 % 16 != 0, so
+    the head dim must stay unsharded with the drop recorded — never an
+    invalid spec."""
+    cfg = get_config("qwen2.5-14b")
+    assert cfg.n_heads == 40
+    rules = make_rules(_mesh((1, 16)), "train")
+    spec = spec_for_axes(rules, (cfg.d_model, cfg.n_heads, cfg.d_head),
+                         ("embed", "heads", "head_dim"), "w_q")
+    assert spec[1] is None
+    assert ("w_q", "heads", cfg.n_heads) in rules.dropped
+    # what DID shard still divides: embed 5120 over data=1
+    assert cfg.d_model % rules.axis_size("data") == 0
+
+
+def test_arctic_56_stays_unsharded_on_16way_model():
+    """arctic-480b's 56-way dim (its head count, and the ISSUE's expert
+    example) on a 16-way model axis: 56 % 16 != 0 → replicated + drop
+    recorded; a 128-expert dim on the same mesh does shard."""
+    cfg = get_config("arctic-480b")
+    assert cfg.n_heads == 56 and cfg.n_experts == 128
+    rules = make_rules(_mesh((1, 16)), "train")
+    spec = spec_for_axes(rules, (cfg.d_model, cfg.n_heads, cfg.d_head),
+                         ("embed", "heads", "head_dim"), "w_q")
+    assert spec[1] is None
+    assert ("w_q", "heads", 56) in rules.dropped
+    spec56 = spec_for_axes(rules, (56, cfg.d_model, cfg.d_ff),
+                           ("experts", "embed", "ffn"), "w_up_56")
+    assert spec56[0] is None
+    assert ("w_up_56", "experts", 56) in rules.dropped
+    rules2 = make_rules(_mesh((1, 16)), "train")
+    spec128 = spec_for_axes(rules2, (cfg.n_experts, cfg.d_model, cfg.d_ff),
+                            ("experts", "embed", "ffn"), "w_up")
+    assert spec128[0] == "model"          # 128 % 16 == 0: shards fine
+
+
+def test_every_guarded_spec_entry_divides():
+    """The guard's contract — any non-None entry divides its dim — over
+    a sweep of awkward shapes (this is what makes specs jit-valid)."""
+    rules = make_rules(_mesh((3, 16)), "train")
+    for dim0 in (1, 7, 40, 48, 56, 96, 128):
+        for dim1 in (1, 6, 9, 21, 48):
+            spec = spec_for_axes(rules, (dim1, dim0, 128),
+                                 ("embed", "heads", "head_dim"),
+                                 f"w_{dim0}_{dim1}")
+            for entry, dim in zip(spec, (dim1, dim0, 128)):
+                if entry is not None:
+                    assert dim % rules.axis_size(entry) == 0
+
+
 def test_long500k_batch1_replicates():
     from repro.distributed.sharding import batch_specs
     import jax

@@ -273,8 +273,9 @@ class TestDominancePruning:
         survivors = [c for c in valid if c["alias_of"] is None]
         assert all(not s["config"]["donate"] for s in survivors)
         assert pl.meta["tuning_cache"]["measurements"] == len(survivors)
-        # the grid is still fully enumerated (paper's axes preserved)
-        assert len(valid) == 48
+        # the grid is still fully enumerated (paper's axes preserved;
+        # 4 policies x 2 streams x 2 fuse x 2 donate since "pipeline")
+        assert len(valid) == 64
         donate_recs = [c for c in valid if c["config"]["donate"]]
         assert donate_recs and all(c["alias_of"] for c in donate_recs)
 
@@ -290,14 +291,21 @@ class TestDominancePruning:
         assert opt_fuse == {True, False}
 
     def test_streams_merge_with_single_group(self):
-        """3mm forms one directive group → stream assignment is
-        identical for any stream count → one class across the axis."""
+        """3mm forms one directive group under the single-group policies
+        → stream assignment is identical for any stream count → one
+        class across the axis.  The pipeline policy is the designed
+        exception: one group per stage makes the stream axis live."""
         p, _ = build_3mm(n=16)
         pl = _auto(p)
         valid = [c for c in pl.meta["tuning"]["candidates"] if c["valid"]]
         streams_of_survivors = {c["config"]["n_streams"] for c in valid
-                                if c["alias_of"] is None}
+                                if c["alias_of"] is None
+                                and c["config"]["policy"] != "pipeline"}
         assert streams_of_survivors == {1}
+        pipe_streams = {c["config"]["n_streams"] for c in valid
+                        if c["alias_of"] is None
+                        and c["config"]["policy"] == "pipeline"}
+        assert len(pipe_streams) > 1     # 3 stage groups: streams are live
 
     def test_alias_records_share_class_numbers(self):
         p, _ = build_3mm(n=16)
@@ -340,11 +348,11 @@ class TestBackendVariant:
         seen = []
         orig = tuner_mod._measure
 
-        def spy(pl, cfg, be, reps):
+        def spy(pl, cfg, be, reps, placement=None):
             v = be.variant(n_streams=cfg.n_streams, donate=cfg.donate)
             seen.append((cfg.n_streams, v.n_streams, cfg.donate,
                          getattr(v, "donate", False)))
-            return orig(pl, cfg, be, reps)
+            return orig(pl, cfg, be, reps, placement=placement)
 
         monkeypatch.setattr(tuner_mod, "_measure", spy)
         p, _ = build("gemm", n=8, iters=2)

@@ -324,3 +324,76 @@ class TestHypothesisFuzzer:
                 f"{[str(o.directive) for o in m.ops if o.kind == 'directive']}")
 
         run()
+
+
+class TestMeshPlacement:
+    """ISSUE 9: sharded-plan validation.  The mesh record is plain JSON
+    (the tuner's meta["mesh"]), so these run without any device mesh."""
+
+    def _mesh(self, specs, dropped=(), shape=(2, 4),
+              axes=("data", "model")):
+        return {"shape": list(shape), "axes": list(axes),
+                "placement": "fsdp", "n_devices": 8,
+                "specs": specs, "dropped": [list(d) for d in dropped]}
+
+    def test_valid_sharded_plan_verifies_clean(self, p3mm):
+        pl = plan(p3mm)
+        mesh = self._mesh({v: ["data", None] for v in "ABCDEF"})
+        rep = verify_plan(pl, mesh=mesh)
+        assert rep.ok and not rep.errors
+
+    def test_meta_mesh_is_picked_up_by_default(self, p3mm):
+        pl = plan(p3mm)
+        m = clone(pl)
+        m.meta["mesh"] = self._mesh({"nosuchvar": ["data"]})
+        rep = verify_plan(m)
+        assert any(v.kind == "mesh-placement" for v in rep.errors)
+
+    def test_unknown_var_in_spec(self, p3mm):
+        pl = plan(p3mm)
+        rep = verify_plan(pl, mesh=self._mesh({"zzz": ["data"]}))
+        v = next(v for v in rep.errors if v.kind == "mesh-placement")
+        assert v.var == "zzz"
+
+    def test_unknown_mesh_axis(self, p3mm):
+        pl = plan(p3mm)
+        rep = verify_plan(pl, mesh=self._mesh({"A": ["expert", None]}))
+        assert any(v.kind == "mesh-placement" and v.var == "A"
+                   for v in rep.errors)
+
+    def test_non_dividing_shard_rejected(self, p3mm):
+        """3mm n=16: dim 16 over a 3-way axis does not divide — the
+        divisibility guard should have dropped it upstream."""
+        pl = plan(p3mm)
+        mesh = self._mesh({"A": ["model", None]}, shape=(2, 3))
+        rep = verify_plan(pl, mesh=mesh)
+        assert any(v.kind == "mesh-placement" and v.var == "A"
+                   for v in rep.errors)
+
+    def test_drop_without_spec_is_a_gap(self, p3mm):
+        """A divisibility-guard drop whose var then has NO spec at all:
+        the placement has a gap (the var's distribution is undefined)."""
+        pl = plan(p3mm)
+        mesh = self._mesh({"A": ["data", None]},
+                          dropped=[("B", "heads", 40)])
+        rep = verify_plan(pl, mesh=mesh)
+        assert any(v.kind == "mesh-placement" and v.var == "B"
+                   for v in rep.errors)
+        # an explicit replicated spec closes the gap
+        mesh2 = self._mesh({"A": ["data", None], "B": []},
+                           dropped=[("B", "heads", 40)])
+        assert verify_plan(pl, mesh=mesh2).ok
+
+    def test_sharded_read_is_a_sync_point(self, p3mm):
+        """The async-race golden mutation (load regrouped away from its
+        callsite) is NOT a race when the operand is sharded: the SPMD
+        dispatch waits on every shard of the distributed upload."""
+        pl = plan(p3mm)
+        i, d = _find(pl, AdvancedLoad, var="A")
+        assert d.asynchronous
+        m = _regroup(pl, i)
+        assert any(v.kind == "async-race"
+                   for v in verify_plan(m, collect_lints=False).errors)
+        mesh = self._mesh({"A": ["data", None]})
+        rep = verify_plan(m, collect_lints=False, mesh=mesh)
+        assert not any(v.kind == "async-race" for v in rep.errors)

@@ -93,11 +93,20 @@ def compute_baseline() -> Dict[str, Dict]:
                   use_calibration=False)
         valid = [c for c in pl.meta["tuning"]["candidates"] if c["valid"]]
         top = _predicted_rank1(valid)
+        tuning = pl.meta["tuning"]
         out[name] = {
             "predicted_winner": top["label"],
             "predicted_s": top["predicted_s"],
             "n_valid": len(valid),
             "n_kernel_variants": n_kernel_variants(valid),
+            # the multi-objective surface (ISSUE 10) is as deterministic
+            # as the predicted ranking: the rank-1 candidate's modeled
+            # joules and residency-walk peak, the per-objective winner
+            # labels, and the Pareto point count are all gated
+            "energy_j": top["energy_j"],
+            "peak_bytes": top["peak_bytes"],
+            "winners": dict(tuning["winners"]),
+            "n_pareto": len(tuning["pareto"]),
             # the winning plan must pass the static verifier
             # (repro.core.verify) — a cost-model change that promotes
             # a racy/inconsistent candidate is a regression even if
@@ -193,6 +202,23 @@ def check(report_path: str = None) -> List[str]:
                 f"{want['n_kernel_variants']} -> "
                 f"{got['n_kernel_variants']} — the kernel tile axis "
                 "stopped being explored")
+        for col in ("energy_j", "peak_bytes"):
+            if col not in want:
+                continue          # pre-multi-objective golden
+            drift = abs(got[col] - want[col]) / max(want[col], 1e-30)
+            if drift > tol:
+                problems.append(
+                    f"{name}: {col} drifted {drift:.1%} "
+                    f"({want[col]:.3e} -> {got[col]:.3e}, tol {tol:.0%})")
+        for obj, label in sorted(want.get("winners", {}).items()):
+            if got["winners"].get(obj) != label:
+                problems.append(
+                    f"{name}: {obj}-objective winner changed "
+                    f"{label} -> {got['winners'].get(obj)}")
+        if got.get("n_pareto", 0) < want.get("n_pareto", 0):
+            problems.append(
+                f"{name}: Pareto frontier shrank "
+                f"{want['n_pareto']} -> {got['n_pareto']} points")
         if not got["verified"]:
             problems.append(
                 f"{name}: tuned winner {got['predicted_winner']} no "

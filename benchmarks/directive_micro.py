@@ -217,6 +217,18 @@ def bench_tuner(out_path: str = "tuning_report.json") -> Dict:
             "n_kernel_variants": n_kernel_variants(tuning["candidates"]),
             "predicted_ms": chosen["predicted_s"] * 1e3,
             "measured_ms": (chosen["measured_s"] or 0.0) * 1e3,
+            # multi-objective columns (ISSUE 10): the chosen plan's
+            # modeled energy + residency-walk peak, the per-objective
+            # winner labels, the frontier size, and the cold-start
+            # predictor verdict
+            "energy_mj": (chosen.get("energy_j") or 0.0) * 1e3,
+            "peak_mb": (chosen.get("peak_bytes") or 0.0) / 1e6,
+            "n_pareto": len(tuning.get("pareto") or ()),
+            "winner_time": (tuning.get("winners") or {}).get("time"),
+            "winner_energy": (tuning.get("winners") or {}).get("energy"),
+            "winner_memory": (tuning.get("winners") or {}).get("memory"),
+            "predictor_accepted": bool(
+                (tuning.get("predictor") or {}).get("accepted")),
             "cache_hit": cache_info["hit"],
             "measurements": cache_info["measurements"],
             "calibration_accepted": bool(cal.get("accepted")),

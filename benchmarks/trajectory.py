@@ -9,6 +9,10 @@ program-by-program and flags regressions:
 * ``predicted_ms`` > 10% higher  → cost-model drift note (only a
   regression when the cost-model version did NOT change between the two
   snapshots — a version bump legitimately reprices everything)
+* ``energy_mj`` / ``peak_mb`` (the ISSUE-10 objective columns of the
+  chosen plan) > 10% higher → gated like ``predicted_ms``: both are
+  model outputs, so an intentional COST_MODEL_VERSION bump downgrades
+  their drift to a note instead of flagging it
 * a program present before but missing now → coverage regression
 
     PYTHONPATH=src python benchmarks/trajectory.py            # report
@@ -70,8 +74,13 @@ def diff(prev: Dict, curr: Dict) -> Tuple[List[str], List[str]]:
                                "missing now (coverage regression)")
             continue
         old, new = p_prog[name], c_prog[name]
+        # model-derived columns (predicted/energy/memory) gate only when
+        # the cost model did not change; a missing key in the OLD
+        # snapshot (pre-multi-objective) yields _pct None and is skipped
         for key, gated in (("measured_ms", True),
-                           ("predicted_ms", same_cost_model)):
+                           ("predicted_ms", same_cost_model),
+                           ("energy_mj", same_cost_model),
+                           ("peak_mb", same_cost_model)):
             d = _pct(float(new.get(key) or 0.0), float(old.get(key) or 0.0))
             if d is None:
                 continue

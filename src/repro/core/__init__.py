@@ -29,11 +29,13 @@ from .ir import (AdvancedLoad, Block, BlockKind, Callsite, DelegateStore,
 from .passes import (Pass, Pipeline, PlanDraft, get_placement,
                      placement_names, register_placement)
 from .planner import naive_plan, plan, transfer_summary
-from .residency import DeviceResidency, ResidencyStats
+from .residency import (DeviceResidency, ResidencyStats,
+                        plan_peak_device_bytes)
 from .tunecache import (COST_MODEL_VERSION, TuneCache, backend_fingerprint,
-                        default_cache, program_fingerprint,
+                        default_cache, device_class_key, program_fingerprint,
                         tuning_fingerprint)
-from .tuner import PlanConfig, predict_cost, tune, winner_exec_kwargs
+from .tuner import (OBJECTIVES, PlanConfig, pareto_front, predict_cost, tune,
+                    winner_exec_kwargs)
 from .verify import (PlanVerificationError, VerifyReport, Violation,
                      verify_plan)
 
@@ -50,7 +52,9 @@ __all__ = [
     "Pass", "Pipeline", "PlanDraft",
     "register_placement", "get_placement", "placement_names",
     "PlanConfig", "predict_cost", "tune", "winner_exec_kwargs",
+    "OBJECTIVES", "pareto_front", "plan_peak_device_bytes",
     "TuneCache", "COST_MODEL_VERSION", "default_cache",
     "program_fingerprint", "backend_fingerprint", "tuning_fingerprint",
+    "device_class_key",
     "verify_plan", "VerifyReport", "Violation", "PlanVerificationError",
 ]

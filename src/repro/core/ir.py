@@ -277,16 +277,37 @@ class Plan:
     #   "var_nbytes"         — concrete byte size of every program var
     #       (the cost model's raw material)
     # and by the plan-space tuner (repro.core.tuner):
-    #   "tuning"             — {"chosen", "backend", "hw", "calibration",
+    #   "tuning"             — {"chosen", "objective", "winners",
+    #       "pareto", "backend", "hw", "calibration", "predictor",
     #       "candidates"}: the ranked candidate table, each entry
     #       carrying the cost breakdown (transfer_s/dispatch_s/kernel_s/
-    #       predicted_s), measured_s when its execution class was run,
-    #       calibrated_s when a fit was made, and alias_of naming the
+    #       predicted_s) plus the ISSUE-10 objective columns (energy_j —
+    #       modeled joules; peak_bytes — static residency-walk peak;
+    #       analytic_s — default-constant predicted seconds),
+    #       measured_s when its execution class was run,
+    #       calibrated_s when a fit was made, predictor_s when a
+    #       cross-program model priced the grid, and alias_of naming the
     #       class survivor for dominance-pruned (execution-identical)
     #       configs.  "hw" is the pricing constants actually used
     #       (calibrated when a fit was cached); "calibration" records
     #       the fit: {"n_rows", "fitted", "accepted",
     #       "rank_corr_before", "rank_corr_after"}.
+    #       "objective" (inside "tuning") — what the chosen candidate
+    #       minimizes: "time" | "energy" | "memory" | {objective:
+    #       weight}; "winners" maps each objective to its frontier-
+    #       guaranteed winner label; "pareto" is the mutually
+    #       non-dominated surface of the table, fastest-first:
+    #       [{"label", "time_s", "energy_j", "peak_bytes"}, ...]
+    #       (time_s is measured when the run measured, predicted
+    #       otherwise).
+    #       "predictor" (inside "tuning") — the cross-program cold-start
+    #       model's outcome for this run: {"n_rows", "n_programs",
+    #       "source" ("fit" | "cache" | None), "accepted",
+    #       "rank_corr_analytic", "rank_corr_predictor",
+    #       "used_for_ranking"}; None when tuning ran cache-less.
+    #       Accepted means the learned ranking of this program's
+    #       measured survivors was no worse than the uncalibrated
+    #       analytic model's (the PR-5 no-regression gate).
     #       "kernel_variants" (inside "tuning") — the winner's tile
     #       choice per kernel-tagged block:
     #       {kernel_name: {param: value}}, e.g.

@@ -50,10 +50,12 @@ def plan(program: Program, *, optimize: bool = True,
     ``optimize`` is the legacy switch (True → "optimized", False →
     "naive"); ``policy`` overrides it.  ``backend`` and ``tune_kwargs``
     are only legal with ``policy="auto"`` (see ``repro.core.tuner.tune``
-    for the knobs: axes, ``top_k``, ``reps``, ``measure``, plus the
-    persistence knobs ``cache``/``refresh``/``calibrate``/
-    ``use_calibration`` — a repeated auto call answers from the
-    persistent tuning cache without re-measuring); an explicit
+    for the knobs: axes, ``top_k``, ``reps``, ``measure``,
+    ``objective="time"|"energy"|"memory"`` or a weight mapping — which
+    Pareto axis the winner minimizes — plus the persistence knobs
+    ``cache``/``refresh``/``calibrate``/``use_calibration`` — a repeated
+    auto call answers from the persistent tuning cache without
+    re-measuring, re-selecting when the objective changed); an explicit
     ``n_streams`` pins the auto policy's stream axis to that value.
 
     Every returned plan is vetted by the static verifier

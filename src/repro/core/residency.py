@@ -23,7 +23,7 @@ import numpy as np
 
 from .backend import Backend, get_backend
 
-__all__ = ["DeviceResidency", "ResidencyStats"]
+__all__ = ["DeviceResidency", "ResidencyStats", "plan_peak_device_bytes"]
 
 
 @dataclasses.dataclass
@@ -136,3 +136,110 @@ class DeviceResidency:
                 self._backend.free(e.device)
             e.device = None
             e.valid_device = False
+
+
+# ---------------------------------------------------------------------------
+# Static peak-residency walk (ISSUE 10) — the tuner's peak-memory objective.
+# ---------------------------------------------------------------------------
+
+def _plan_group_vars(pl, group: int) -> set:
+    """Vars a ``Release`` of ``group`` frees: the group's ``mapbyname``
+    declaration plus everything its member codelets read or write.  Local
+    mirror of ``executor.group_vars`` — the executor pulls in the whole
+    backend stack, which this jax-free walk must not."""
+    from .ir import GroupDecl
+    names: set = set()
+    for d in pl.directives(GroupDecl):
+        if d.group == group:
+            names.update(d.mapbyname)
+    for bi in pl.groups.get(group, ()):
+        blk = pl.program.blocks[bi]
+        names.update(blk.reads)
+        names.update(blk.writes)
+    return names
+
+
+def _kernel_workset_bytes(blk, kernel_variants, shapes) -> float:
+    """On-chip tile working set of a kernel-tagged block under the
+    candidate's chosen tile ``params`` (``kernel_variants`` maps kernel
+    name -> params; registry defaults otherwise).  0 when shapes are
+    unavailable or the tile does not validate — the walk then ranks on
+    HBM residency alone, which is the plan-dependent part anyway."""
+    if not getattr(blk, "kernel", None) or not shapes:
+        return 0.0
+    try:
+        from repro.kernels.variants import KERNELS, kernel_workset
+        sds = [shapes[v] for v in blk.reads]
+        op_shapes = [tuple(s.shape) for s in sds]
+        itemsizes = [int(np.dtype(s.dtype).itemsize) for s in sds]
+        params = (kernel_variants or {}).get(blk.kernel)
+        if params is None:
+            params = KERNELS[blk.kernel]["defaults"]
+        return float(kernel_workset(blk.kernel, dict(params), op_shapes,
+                                    itemsizes))
+    except Exception:
+        return 0.0
+
+
+def plan_peak_device_bytes(pl, *, donate: bool = False,
+                           kernel_variants: Optional[Dict] = None,
+                           shapes: Optional[Dict] = None) -> float:
+    """Peak device bytes of one walk over the plan's ops — the tuner's
+    third objective (time × energy × **memory**).
+
+    The walk tracks the set of device-allocated buffers exactly as the
+    executor would create them: ``AdvancedLoad`` allocates its var,
+    an offload block allocates any not-yet-resident actual read plus its
+    outputs, ``Release`` frees its group's vars (``mapbyname`` + member
+    reads/writes).  ``DelegateStore`` does NOT free — HMPP keeps the
+    device copy valid until the group releases.
+
+    At each offload callsite the peak candidate additionally charges:
+
+    * **transients** — dummy device zeros for declared-but-unread
+      operands, and output double-buffering for every written var whose
+      old device buffer cannot be reused (not resident, or resident but
+      ``donate=False``): briefly both the old input and the new output
+      exist, which is why donation is a memory knob, not just a time one;
+    * **kernel tile working set** — ``kernel_workset`` of the block's
+      kernel under the candidate's tile choice (``kernel_variants``),
+      so the kernel axis moves this objective: bigger tiles run faster
+      (fewer passes over HBM) but hold a larger slice on-chip.
+
+    ``shapes`` is the analyzer's var -> ShapeDtypeStruct map (for kernel
+    operand shapes); byte sizes come from ``pl.meta["var_nbytes"]``.
+    Returns bytes (float); vars with unknown size count 0.
+    """
+    from .ir import AdvancedLoad, BlockKind, Release
+    nb: Dict[str, float] = dict(pl.meta.get("var_nbytes") or {})
+    resident: Dict[str, float] = {}
+    peak = 0.0
+    for op in pl.ops:
+        if op.kind == "directive":
+            d = op.directive
+            if isinstance(d, AdvancedLoad):
+                resident.setdefault(d.var, float(nb.get(d.var, 0)))
+            elif isinstance(d, Release):
+                for v in _plan_group_vars(pl, d.group):
+                    resident.pop(v, None)
+            continue
+        if op.kind != "block":
+            continue
+        blk = pl.program.blocks[op.block_idx]
+        if blk.kind is not BlockKind.OFFLOAD:
+            continue
+        actual = set(blk.effective_reads())
+        transient = 0.0
+        for v in blk.reads:
+            if v not in actual:        # dummy zeros arg, freed after launch
+                transient += float(nb.get(v, 0))
+            else:                      # upload-on-demand stays resident
+                resident.setdefault(v, float(nb.get(v, 0)))
+        for w in blk.writes:           # output double-buffer unless donated
+            if w not in resident or not donate:
+                transient += float(nb.get(w, 0))
+        transient += _kernel_workset_bytes(blk, kernel_variants, shapes)
+        peak = max(peak, sum(resident.values()) + transient)
+        for w in blk.writes:
+            resident[w] = float(nb.get(w, 0))
+    return max(peak, sum(resident.values()))

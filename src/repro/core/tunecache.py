@@ -26,11 +26,14 @@ entry and checked on lookup, so a genuinely stale entry (program edited
 in place, cost-model version bumped) is evicted rather than reused.
 ``tune(refresh=True)`` bypasses lookup and overwrites.
 
-The cache also persists the *measured calibration* of the cost model
+The cache also owns a per-DEVICE-CLASS store (``device_class_key`` —
+stream count and donation flag deliberately excluded, they are candidate
+knobs, not silicon): the *measured calibration* of the cost model
 (fitted ``pcie_bw`` / ``launch_overhead_s`` / ``sync_overhead_s``, see
-``repro.roofline.analysis.fit_offload_constants``) per backend, keyed
-on the cost-model version, so constants fitted while tuning one program
-price the next one.
+``repro.roofline.analysis.fit_offload_constants``), every program's
+measured candidate rows, and the cross-program cold-start predictor
+fitted from them (ISSUE 10) — so constants and rankings learned while
+tuning one program price the next, never-measured one.
 
 Location: the ``REPRO_TUNE_CACHE`` env var (empty/"off"/"0" disables
 caching), else ``$XDG_CACHE_HOME/repro/tunecache``.  This module is
@@ -50,15 +53,18 @@ from typing import Any, Dict, Optional, Sequence
 __all__ = [
     "COST_MODEL_VERSION", "TuneCache", "default_cache",
     "program_fingerprint", "backend_fingerprint", "grid_fingerprint",
-    "tuning_fingerprint", "calibration_fingerprint",
+    "tuning_fingerprint", "calibration_fingerprint", "device_class_key",
 ]
 
 # Bump whenever predict_cost / offload_cost_terms semantics change: every
 # cached table and every fitted calibration is invalidated by the bump.
 # v1 was the PR-3 tuner (no cache); v2 adds dominance pruning + hw= pricing;
 # v3 adds the kernel-variant axis and the two-level (PCIe + HBM) roofline;
-# v4 adds the mesh placement axis and interconnect (ici_bw) cost terms.
-COST_MODEL_VERSION = 4
+# v4 adds the mesh placement axis and interconnect (ici_bw) cost terms;
+# v5 adds the energy / peak-device-bytes objectives and the cross-program
+# candidate predictor (ISSUE 10) — bumping also clears the per-device-class
+# store (calibration + measured rows + predictor).
+COST_MODEL_VERSION = 5
 
 _ENV_VAR = "REPRO_TUNE_CACHE"
 _MAX_ENV_VAR = "REPRO_TUNE_CACHE_MAX"
@@ -163,6 +169,22 @@ def calibration_fingerprint(hw: Dict[str, float]) -> str:
     constants) pair; either changing discards them."""
     return _sha({"cost_model_version": COST_MODEL_VERSION,
                  "hw": {k: hw[k] for k in sorted(hw)}})
+
+
+def device_class_key(backend) -> str:
+    """Key of the per-DEVICE-CLASS store (calibration constants, measured
+    candidate rows, fitted cross-program predictor).  Unlike
+    ``backend_fingerprint`` it deliberately EXCLUDES the stream count and
+    the donation flag: those are per-candidate knobs (features of a
+    measured row), not properties of the silicon — a 4-stream and a
+    2-stream run of the same device must pool their measurements rather
+    than fit in separate slots (the PR 5/6 per-backend-slot bug)."""
+    key = f"{type(backend).__name__}:{backend.name}" \
+          f":{getattr(backend, '_device', None)}"
+    mesh_key = getattr(backend, "mesh_key", None)
+    if mesh_key:
+        key += f":mesh{mesh_key}"
+    return key
 
 
 class TuneCache:
@@ -284,17 +306,84 @@ class TuneCache:
                 pass
             excess -= 1
 
-    # -- fitted calibration constants ---------------------------------------
-    def load_calibration(self, backend_key: str,
-                         hw: Dict[str, float]) -> Optional[Dict[str, float]]:
-        payload = self.lookup(f"calibration--{backend_key}",
-                              calibration_fingerprint(hw))
-        return payload.get("fitted") if payload else None
+    # -- per-device-class store (ISSUE 10) ----------------------------------
+    # One slot per device class (``device_class_key``) holding everything
+    # measurement-derived the class accumulates across programs:
+    #   {"calibration": fitted constants | absent,
+    #    "programs":    {program_fp: {"program": name, "rows": [...]}},
+    #    "predictor":   fitted cross-program model | absent}
+    # Previously calibration lived in per-BACKEND slots, so the same
+    # device fitted (and read) different constants at each stream count —
+    # the carried-over PR 5/6 bug this store fixes.  Fingerprinted on
+    # (COST_MODEL_VERSION, default hw): either changing drops the slot.
 
-    def store_calibration(self, backend_key: str, hw: Dict[str, float],
+    _MAX_DEVCLASS_PROGRAMS = 32
+
+    def _load_devclass(self, device_key: str,
+                       hw: Dict[str, float]) -> Dict[str, Any]:
+        payload = self.lookup(f"devclass--{device_key}",
+                              calibration_fingerprint(hw))
+        return dict(payload) if isinstance(payload, dict) else {}
+
+    def _store_devclass(self, device_key: str, hw: Dict[str, float],
+                        payload: Dict[str, Any]) -> None:
+        self.store(f"devclass--{device_key}",
+                   calibration_fingerprint(hw), payload)
+
+    def load_calibration(self, device_key: str,
+                         hw: Dict[str, float]) -> Optional[Dict[str, float]]:
+        return self._load_devclass(device_key, hw).get("calibration")
+
+    def store_calibration(self, device_key: str, hw: Dict[str, float],
                           fitted: Dict[str, float]) -> None:
-        self.store(f"calibration--{backend_key}",
-                   calibration_fingerprint(hw), {"fitted": fitted})
+        payload = self._load_devclass(device_key, hw)
+        payload["calibration"] = fitted
+        self._store_devclass(device_key, hw, payload)
+
+    def add_measured_rows(self, device_key: str, hw: Dict[str, float],
+                          program_fp: str, program_name: str,
+                          rows: Sequence[Dict[str, Any]]) -> None:
+        """Record one program's measured candidate rows (feature dicts,
+        see ``roofline.analysis.candidate_features``) under the device
+        class.  Re-tuning the same program replaces its rows; past
+        ``_MAX_DEVCLASS_PROGRAMS`` programs the oldest entry is dropped
+        (insertion order — dicts preserve it, JSON round-trips it)."""
+        if not rows:
+            return
+        payload = self._load_devclass(device_key, hw)
+        progs = payload.setdefault("programs", {})
+        progs.pop(program_fp, None)
+        progs[program_fp] = {"program": program_name, "rows": list(rows)}
+        while len(progs) > self._MAX_DEVCLASS_PROGRAMS:
+            del progs[next(iter(progs))]
+        self._store_devclass(device_key, hw, payload)
+
+    def load_measured_rows(self, device_key: str, hw: Dict[str, float],
+                           exclude_fp: Optional[str] = None
+                           ) -> list:
+        """Every stored row across the class's programs — the predictor's
+        training set.  ``exclude_fp`` drops the program being tuned, so
+        pricing its grid is always a hold-one-out prediction."""
+        progs = self._load_devclass(device_key, hw).get("programs") or {}
+        rows = []
+        for fp, entry in progs.items():
+            if fp == exclude_fp:
+                continue
+            for row in entry.get("rows", ()):
+                r = dict(row)
+                r.setdefault("program", entry.get("program", fp))
+                rows.append(r)
+        return rows
+
+    def load_predictor(self, device_key: str,
+                       hw: Dict[str, float]) -> Optional[Dict[str, Any]]:
+        return self._load_devclass(device_key, hw).get("predictor")
+
+    def store_predictor(self, device_key: str, hw: Dict[str, float],
+                        model: Dict[str, Any]) -> None:
+        payload = self._load_devclass(device_key, hw)
+        payload["predictor"] = model
+        self._store_devclass(device_key, hw, payload)
 
     def clear(self) -> None:
         if self.path.is_dir():

@@ -56,6 +56,25 @@ the predicted-vs-measured rank correlation (both correlations are
 recorded in ``meta["tuning"]["calibration"]``), persisted per backend in
 the cache, and used to price subsequent programs.
 
+ISSUE 10 additions — multi-objective selection and learned cold start:
+
+*Three objectives* — every candidate is scored on measured/predicted
+seconds, modeled joules (``energy_j``: PCIe/HBM/ICI bytes × per-byte
+constants + flops × ``flop_j``) and peak device bytes
+(``peak_bytes``: the static residency walk in ``core.residency``,
+moved by donation and kernel tile size).  The non-dominated surface is
+returned in ``meta["tuning"]["pareto"]`` with per-objective winners in
+``["winners"]``; ``tune(..., objective=)`` — and therefore
+``plan(p, policy="auto", objective=)`` — selects which axis the chosen
+plan minimizes ("time" | "energy" | "memory" | a weight mapping).
+
+*Cross-program predictor* — measured candidate rows accumulate in the
+tunecache per DEVICE CLASS; with rows from ≥ 2 other programs a
+featurized linear model (``fit_candidate_predictor``) prices a
+never-measured program's grid, gated by the same
+rank-correlation-no-regression rule as the calibration and recorded in
+``meta["tuning"]["predictor"]``.
+
 Entry point: ``tune(program, backend=...)``, or equivalently
 ``plan(program, policy="auto", backend=...)``.
 
@@ -69,20 +88,24 @@ import dataclasses
 import itertools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from ..roofline.analysis import (HW, dot_flops, fit_offload_constants,
-                                 kernel_roofline_terms, offload_cost_terms,
-                                 parse_hlo, rank_correlation)
+from ..roofline.analysis import (HW, candidate_features, dot_flops,
+                                 fit_candidate_predictor,
+                                 fit_offload_constants, kernel_roofline_terms,
+                                 offload_cost_terms, parse_hlo,
+                                 predict_candidate_s, rank_correlation)
 from .analysis import ProgramAnalysis, analyze
 from .backend import Backend, get_backend
 from .ir import (AdvancedLoad, BlockKind, DelegateStore, Plan, Program,
                  Synchronize)
 from .passes import Pipeline
+from .residency import plan_peak_device_bytes
 from .tunecache import (TuneCache, backend_fingerprint, default_cache,
-                        grid_fingerprint, tuning_fingerprint)
+                        device_class_key, grid_fingerprint,
+                        program_fingerprint, tuning_fingerprint)
 from .verify import PlanVerificationError, verify_plan
 
 __all__ = ["PlanConfig", "enumerate_configs", "predict_cost", "tune",
-           "winner_exec_kwargs"]
+           "winner_exec_kwargs", "pareto_front", "OBJECTIVES"]
 
 # one kernel's tile choice: (kernel_name, ((param, value), ...)) — the
 # params half is KernelVariant.params (canonical sorted pairs)
@@ -151,14 +174,18 @@ DEFAULT_STREAMS: Tuple[int, ...] = (1, 2, 3, 4)
 
 # the hw constants snapshotted into plan.meta["tuning"]["hw"]
 _HW_KEYS = ("pcie_bw", "hbm_bw", "peak_flops_bf16", "ici_bw",
-            "launch_overhead_s", "sync_overhead_s")
+            "launch_overhead_s", "sync_overhead_s",
+            "pcie_j_per_byte", "hbm_j_per_byte", "ici_j_per_byte", "flop_j")
 
 # every field predict_cost() contributes to a candidate record (what an
-# alias copies from its execution-class survivor)
+# alias copies from its execution-class survivor).  energy_j / analytic_s
+# / peak_bytes are the ISSUE-10 objective columns: class-level quantities
+# (an alias executes identically), so aliases inherit them too.
 _COST_FIELDS = ("h2d_bytes", "d2h_bytes", "loads", "stores", "syncs",
                 "kernel_launches", "dispatches", "flops", "kernel_bytes",
                 "coll_bytes", "transfer_s", "dispatch_s", "kernel_s",
-                "collective_s", "predicted_s")
+                "collective_s", "predicted_s", "energy_j", "analytic_s",
+                "peak_bytes")
 
 # measurement-derived fields an alias inherits beside measured_s
 _MEASURE_FIELDS = ("measured_kernel_s", "kernel_residual_s")
@@ -360,6 +387,142 @@ def predict_cost(pl: Plan, cfg: PlanConfig,
 
 
 # --------------------------------------------------------------------------
+# Multi-objective selection (ISSUE 10): time × energy × memory.
+# --------------------------------------------------------------------------
+
+OBJECTIVES: Tuple[str, ...] = ("time", "energy", "memory")
+
+# lexicographic tie-break order per primary objective: a winner must sit
+# on the Pareto frontier, and the lexicographic minimum always does
+_LEXI_ORDER = {"time": ("time", "energy", "memory"),
+               "energy": ("energy", "time", "memory"),
+               "memory": ("memory", "time", "energy")}
+
+
+def pareto_front(points: Sequence[Sequence[float]]) -> List[int]:
+    """Indices of the non-dominated points (minimization, every axis).
+    ``a`` dominates ``b`` iff a ≤ b on all axes and a < b on at least
+    one; duplicated points are all kept (neither dominates)."""
+    pts = [tuple(float(v) for v in p) for p in points]
+    front = []
+    for i, a in enumerate(pts):
+        dominated = False
+        for j, b in enumerate(pts):
+            if j != i and all(bv <= av for bv, av in zip(b, a)) \
+                    and any(bv < av for bv, av in zip(b, a)):
+                dominated = True
+                break
+        if not dominated:
+            front.append(i)
+    return front
+
+
+def _objective_value(r: Dict[str, Any], obj: str) -> float:
+    """One candidate record's score on one objective.  Time prefers the
+    measurement; an unmeasured table falls back to the analytic
+    prediction (``predictor_s``, when a cold-start model priced the
+    grid, is recorded beside it but never silently replaces the
+    objective column — see ``used_for_ranking``)."""
+    if obj == "time":
+        m = r.get("measured_s")
+        return float(m if m is not None else r.get("predicted_s", 0.0))
+    if obj == "energy":
+        return float(r.get("energy_j", 0.0) or 0.0)
+    if obj == "memory":
+        return float(r.get("peak_bytes", 0.0) or 0.0)
+    raise ValueError(f"unknown objective {obj!r}")
+
+
+def _objective_pool(cands: Sequence[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Records the frontier/winners are computed over: the valid class
+    survivors (aliases are the same execution — duplicate points), the
+    measured ones when any measurement happened."""
+    survivors = [r for r in cands
+                 if r.get("valid") and r.get("alias_of") is None]
+    measured = [r for r in survivors if r.get("measured_s") is not None]
+    return measured or survivors
+
+
+def _pareto_records(cands: Sequence[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """``meta["tuning"]["pareto"]``: the non-dominated surface of the
+    candidate table as (label, time_s, energy_j, peak_bytes) points,
+    sorted fastest-first.  Coordinate-identical survivors (distinct
+    policies whose plans happen to price the same) collapse to one point
+    — the best-ranked label — so the surface stays readable."""
+    pool = _objective_pool(cands)
+    pts = [tuple(_objective_value(r, o) for o in OBJECTIVES) for r in pool]
+    best_at: Dict[Tuple[float, ...], Dict[str, Any]] = {}
+    for i in pareto_front(pts):
+        seen = best_at.get(pts[i])
+        if seen is None or (pool[i].get("rank") or 0) < (seen.get("rank")
+                                                         or 0):
+            best_at[pts[i]] = pool[i]
+    front = [{"label": r["label"], "time_s": pt[0], "energy_j": pt[1],
+              "peak_bytes": pt[2]} for pt, r in best_at.items()]
+    front.sort(key=lambda e: (e["time_s"], e["label"]))
+    return front
+
+
+def _objective_winners(cands: Sequence[Dict[str, Any]]) -> Dict[str, str]:
+    """Per-objective winner labels.  Each is the LEXICOGRAPHIC minimum
+    (primary objective, then the others, then predicted rank), which is
+    provably on the Pareto frontier — a plain per-axis argmin could pick
+    a dominated point on a tie."""
+    pool = _objective_pool(cands)
+    winners = {}
+    for obj in OBJECTIVES:
+        order = _LEXI_ORDER[obj]
+        winners[obj] = min(
+            pool, key=lambda r: tuple(_objective_value(r, o) for o in order)
+            + (r.get("rank") or 0,))["label"]
+    return winners
+
+
+def _check_objective(objective: Any) -> Any:
+    """Validate/normalize the ``objective=`` argument: one of
+    ``OBJECTIVES`` or a non-empty {objective: weight} mapping."""
+    if isinstance(objective, str):
+        if objective not in OBJECTIVES:
+            raise ValueError(
+                f"objective must be one of {OBJECTIVES} or a weight "
+                f"mapping, got {objective!r}")
+        return objective
+    if isinstance(objective, dict):
+        bad = set(objective) - set(OBJECTIVES)
+        if bad or not objective:
+            raise ValueError(
+                f"objective weight keys must be among {OBJECTIVES}, "
+                f"got {sorted(objective)}")
+        return {k: float(v) for k, v in objective.items()}
+    raise ValueError(f"unsupported objective {objective!r}")
+
+
+def _weighted_choice(cands: Sequence[Dict[str, Any]],
+                     weights: Dict[str, float]) -> Dict[str, Any]:
+    """Scalarized selection: each objective min-normalized over the pool
+    (so weights compare dimensionless ratios-to-best, not seconds against
+    joules), then the weighted sum is minimized."""
+    pool = _objective_pool(cands)
+    mins = {o: min(_objective_value(r, o) for r in pool) or 1.0
+            for o in OBJECTIVES}
+
+    def score(r):
+        return sum(w * _objective_value(r, o) / mins[o]
+                   for o, w in weights.items())
+    return min(pool, key=lambda r: (score(r), r.get("rank") or 0))
+
+
+def _select_chosen(cands: Sequence[Dict[str, Any]], objective: Any,
+                   winners: Dict[str, str]) -> Dict[str, Any]:
+    """The chosen record for a non-default objective (``"time"`` keeps
+    the tuner's historical rule and never routes through here)."""
+    if isinstance(objective, dict):
+        return _weighted_choice(cands, objective)
+    label = winners[objective]
+    return next(r for r in cands if r["label"] == label)
+
+
+# --------------------------------------------------------------------------
 # Measurement.
 # --------------------------------------------------------------------------
 
@@ -408,7 +571,10 @@ def winner_exec_kwargs(pl: Plan, backend: Any = None) -> Dict[str, Any]:
     compiled mode with the winner's fusion flag and kernel tile sizes,
     on a donate-enabled twin of ``backend`` when the winner wants
     donation.  Without this a caller re-running the winner on the plain
-    backend measures the nodonate timing under a donate label."""
+    backend measures the nodonate timing under a donate label.  The
+    flags come from the plan's CHOSEN candidate, so tuning with
+    ``objective="energy"``/``"memory"`` flows through here unchanged —
+    the executor simply gets that objective's winner."""
     be = _donation_variant(get_backend(backend),
                            bool(pl.meta.get("donate")))
     return dict(mode="compiled",
@@ -462,16 +628,37 @@ def _resolve_cache(cache: Any) -> Optional[TuneCache]:
 
 
 def _cached_plan(program: Program, an: ProgramAnalysis, tuning: Dict,
-                 fp: str, tc: TuneCache, be: Backend) -> Plan:
+                 fp: str, tc: TuneCache, be: Backend,
+                 objective: Any = "time") -> Plan:
     """Rebuild the winning plan from a cache hit: the pass pipeline is
     deterministic, so re-running it for the chosen config reproduces the
     measured winner's ops exactly; the serialized table is attached
     verbatim (identical to the fresh run that stored it).
 
+    The requested ``objective`` is NOT part of the fingerprint — the
+    measured table is objective-independent, so one entry answers every
+    objective.  A request that differs from the stored selection
+    re-selects the chosen label from the stored per-objective winners
+    (or re-scalarizes, for weight mappings) without re-measuring.
+
     The rebuilt winner is re-vetted by the static verifier — a corrupt
     payload (malformed keys raise ``KeyError``/``StopIteration`` here)
     or a stale one that no longer verifies against the current pipeline
     raises, and the caller evicts the entry instead of executing it."""
+    if objective != tuning.get("objective", "time"):
+        tuning = dict(tuning)
+        tuning["objective"] = objective
+        if objective == "time":
+            measured = [r for r in tuning["candidates"]
+                        if r.get("valid") and r.get("measured_s") is not None]
+            tuning["chosen"] = (
+                min(measured,
+                    key=lambda r: (r["measured_s"], r.get("rank") or 0))
+                if measured else tuning["candidates"][0])["label"]
+        else:
+            tuning["chosen"] = _select_chosen(
+                tuning["candidates"], objective,
+                tuning.get("winners") or {})["label"]
     chosen = next(c for c in tuning["candidates"]
                   if c["label"] == tuning["chosen"])
     cfg = _cfg_from_dict(chosen["config"])
@@ -551,7 +738,8 @@ def tune(program: Program, *, backend: Any = None,
          configs: Optional[Sequence[PlanConfig]] = None,
          measure: bool = True, top_k: Optional[int] = None,
          reps: int = 2, cache: Any = None, refresh: bool = False,
-         calibrate: bool = True, use_calibration: bool = True) -> Plan:
+         calibrate: bool = True, use_calibration: bool = True,
+         objective: Any = "time") -> Plan:
     """Explore the plan space; return the winning ``Plan``.
 
     Candidates are grouped into *execution classes* (identical ops +
@@ -575,14 +763,39 @@ def tune(program: Program, *, backend: Any = None,
 
     ``calibrate``/``use_calibration`` control the measured calibration:
     fitted ``pcie_bw``/``launch_overhead_s``/``sync_overhead_s`` are
-    stored per backend and used to price subsequent tuning calls (see
-    ``meta["tuning"]["calibration"]`` for the fit and the
-    before/after rank correlations).  Returned meta:
+    stored per DEVICE CLASS (``tunecache.device_class_key`` — shared
+    across stream-count/donation twins of the same device) and used to
+    price subsequent tuning calls (see ``meta["tuning"]["calibration"]``
+    for the fit and the before/after rank correlations).
 
-        plan.meta["tuning"]   {"chosen", "backend", "hw", "calibration",
-                              "candidates"} — candidates ranked by
-                              predicted cost, each with predicted AND
-                              measured seconds
+    ``objective`` (ISSUE 10) selects which axis the winner minimizes:
+    ``"time"`` (default, the historical behaviour), ``"energy"``
+    (modeled joules: transfer + HBM + interconnect bytes × per-byte
+    constants, flops × ``flop_j``), ``"memory"`` (peak device bytes from
+    the static residency walk, ``plan_peak_device_bytes`` — donation and
+    kernel tile size both move it), or a ``{objective: weight}`` mapping
+    scalarized over min-normalized columns.  Every candidate carries all
+    three columns and the non-dominated surface is returned regardless
+    of the objective, so switching objectives re-selects from the same
+    (cached) table without re-measuring.
+
+    When the tunecache holds measured rows from ≥ 2 OTHER programs of
+    the same device class, a cross-program predictor
+    (``fit_candidate_predictor``) prices this grid too
+    (``predictor_s``): accepted — and persisted — only when it does not
+    lower the predicted-vs-measured rank correlation against the
+    uncalibrated analytic model on this program's measurements; on a
+    zero-measurement cold start (``measure=False`` or abstract inputs)
+    an available model picks the winner (``used_for_ranking``).
+
+    Returned meta:
+
+        plan.meta["tuning"]   {"chosen", "objective", "backend", "hw",
+                              "calibration", "predictor", "winners",
+                              "pareto", "candidates"} — candidates
+                              ranked by predicted cost, each with
+                              predicted AND measured seconds plus the
+                              energy_j / peak_bytes objective columns
         plan.meta["tuning_cache"]
                               {"hit", "measurements", "path",
                               "fingerprint"} — cache outcome + how many
@@ -635,18 +848,26 @@ def tune(program: Program, *, backend: Any = None,
                     for c in combos)
         cfg_list = expanded
 
-    # -- cache lookup (measured tables only) --------------------------------
-    tc = _resolve_cache(cache) if measure else None
+    objective = _check_objective(objective)
+
+    # -- cache: the measured-table slot is measure-only, but the device-
+    # class store (calibration / measured rows / predictor) also serves
+    # prediction-only runs — that is the whole point of a cold start
+    tc = _resolve_cache(cache)
     fp = slot = None
     be_key = backend_fingerprint(be)
-    if tc is not None:
+    dc_key = device_class_key(be)
+    prog_fp = program_fingerprint(program)
+    if tc is not None and measure:
         protocol = {"measure": True, "top_k": top_k, "reps": int(reps),
                     "calibrate": bool(calibrate),
                     "use_calibration": bool(use_calibration)}
         fp = tuning_fingerprint(program, be, cfg_list, protocol, HW)
         # the grid/protocol is part of the SLOT (coexisting entries),
         # not just the fingerprint (which would evict-thrash between
-        # alternating protocol variants of the same program)
+        # alternating protocol variants of the same program); the
+        # OBJECTIVE is deliberately absent from both — the table is
+        # objective-independent and re-selection is free
         slot = (f"{program.name}--{be_key}"
                 f"--{grid_fingerprint(cfg_list, protocol)[:16]}")
         if not refresh:
@@ -654,7 +875,7 @@ def tune(program: Program, *, backend: Any = None,
             if payload is not None:
                 try:
                     return _cached_plan(program, an, payload["tuning"],
-                                        fp, tc, be)
+                                        fp, tc, be, objective)
                 except (PlanVerificationError, KeyError, StopIteration,
                         TypeError, ValueError):
                     # corrupt payload or a winner that no longer passes
@@ -664,9 +885,26 @@ def tune(program: Program, *, backend: Any = None,
     # -- pricing constants: calibrated when a fit is cached -----------------
     pricing_hw = dict(HW)
     if use_calibration and tc is not None:
-        fitted = tc.load_calibration(be_key, HW)
+        fitted = tc.load_calibration(dc_key, HW)
         if fitted:
             pricing_hw.update(fitted)
+
+    # -- cross-program cold-start predictor (ISSUE 10): fit from OTHER
+    # programs' measured rows accumulated for this device class; fall
+    # back to the last persisted (previously accepted) model
+    predictor_model = None
+    predictor_source = None
+    n_train_rows = 0
+    if tc is not None:
+        train_rows = tc.load_measured_rows(dc_key, HW, exclude_fp=prog_fp)
+        n_train_rows = len(train_rows)
+        predictor_model = fit_candidate_predictor(train_rows)
+        if predictor_model is not None:
+            predictor_source = "fit"
+        else:
+            predictor_model = tc.load_predictor(dc_key, HW)
+            if predictor_model is not None:
+                predictor_source = "cache"
 
     # -- enumerate + dominance-prune into execution classes -----------------
     flops_cache: Optional[Dict[int, float]] = None
@@ -729,6 +967,20 @@ def tune(program: Program, *, backend: Any = None,
                 flops_cache = _block_flops(program, an.shapes)
             base.update(predict_cost(pl, cfg, flops_cache, hw=pricing_hw,
                                      shapes=an.shapes, mesh=cfg_mesh))
+            # remaining objective columns (energy_j already arrived with
+            # the cost terms): analytic_s re-prices the counters with the
+            # DEFAULT constants — the predictor's anchor feature and the
+            # no-regression baseline its acceptance is judged against —
+            # and peak_bytes walks the plan's residency under this
+            # class's donation flag and kernel tile choice
+            base["analytic_s"] = offload_cost_terms(
+                base["h2d_bytes"], base["d2h_bytes"], base["dispatches"],
+                base["syncs"], base["flops"], base["kernel_bytes"],
+                base["coll_bytes"])["predicted_s"]
+            base["peak_bytes"] = plan_peak_device_bytes(
+                pl, donate=eff_donate,
+                kernel_variants=cfg.variants_map() or None,
+                shapes=an.shapes)
             classes[key] = base
             plans[cfg.label] = pl
         else:
@@ -748,6 +1000,15 @@ def tune(program: Program, *, backend: Any = None,
     valid.sort(key=lambda r: r["predicted_s"])
     for i, r in enumerate(valid):
         r["rank"] = i + 1
+
+    # price the grid with the cross-program model — per candidate,
+    # aliases included: the stream count is a knob the analytic model
+    # cannot always separate (classes merge when streams don't change
+    # the ops), but it IS a predictor feature, so merged configs carry
+    # distinct learned prices
+    if predictor_model is not None:
+        for r in valid:
+            r["predictor_s"] = predict_candidate_s(predictor_model, r)
 
     # -- measure one survivor per class -------------------------------------
     n_measured = 0
@@ -775,7 +1036,45 @@ def tune(program: Program, *, backend: Any = None,
     if calibrate and measured_survivors:
         calibration = _calibrate(measured_survivors, pricing_hw)
         if calibration["accepted"] and calibration["fitted"] and tc:
-            tc.store_calibration(be_key, HW, calibration["fitted"])
+            tc.store_calibration(dc_key, HW, calibration["fitted"])
+
+    # accumulate this program's measured rows into the device-class
+    # store — the training set future programs' cold starts fit from.
+    # Survivors only: an alias shares its survivor's measurement, and
+    # labeling a different stream count with the same seconds would
+    # teach the model the knob is free when it merely wasn't separable
+    # here.
+    if tc is not None and measured_survivors:
+        tc.add_measured_rows(
+            dc_key, HW, prog_fp, program.name,
+            [dict(candidate_features(r), measured_s=r["measured_s"],
+                  program=program.name)
+             for r in measured_survivors])
+
+    # predictor acceptance: same no-regression gate as the calibration —
+    # kept (and persisted for true cold starts) only when its ranking of
+    # THIS program's measured survivors is at least as good as the
+    # uncalibrated analytic model's
+    predictor = None
+    if tc is not None:
+        predictor = {"n_rows": n_train_rows,
+                     "n_programs": (predictor_model or {}).get("n_programs"),
+                     "source": predictor_source, "accepted": None,
+                     "rank_corr_analytic": None,
+                     "rank_corr_predictor": None,
+                     "used_for_ranking": False}
+        if predictor_model is not None and len(measured_survivors) >= 2:
+            corr_a = rank_correlation(
+                [r["analytic_s"] for r in measured_survivors],
+                [r["measured_s"] for r in measured_survivors])
+            corr_p = rank_correlation(
+                [r["predictor_s"] for r in measured_survivors],
+                [r["measured_s"] for r in measured_survivors])
+            predictor.update(rank_corr_analytic=corr_a,
+                             rank_corr_predictor=corr_p,
+                             accepted=corr_p >= corr_a)
+            if predictor["accepted"] and predictor_source == "fit":
+                tc.store_predictor(dc_key, HW, predictor_model)
 
     # merged configs inherit their survivor's measurements
     by_label = {r["label"]: r for r in valid}
@@ -789,10 +1088,24 @@ def tune(program: Program, *, backend: Any = None,
                     r[k] = survivor[k]
 
     measured = [r for r in valid if r["measured_s"] is not None]
-    # ties (merged classes share a value) resolve to the best rank,
-    # which is always a class survivor
-    chosen = (min(measured, key=lambda r: (r["measured_s"], r["rank"]))
-              if measured else valid[0])
+    winners = _objective_winners(valid)
+    pareto = _pareto_records(valid)
+    if objective == "time":
+        # the historical rule: best measured seconds, ties (merged
+        # classes share a value) resolve to the best rank, which is
+        # always a class survivor.  On a zero-measurement cold start an
+        # available cross-program model outranks the analytic order.
+        if measured:
+            chosen = min(measured,
+                         key=lambda r: (r["measured_s"], r["rank"]))
+        elif predictor_model is not None:
+            chosen = min(valid,
+                         key=lambda r: (r["predictor_s"], r["rank"]))
+            predictor["used_for_ranking"] = True
+        else:
+            chosen = valid[0]
+    else:
+        chosen = _select_chosen(valid, objective, winners)
 
     chosen_cfg = _cfg_from_dict(chosen["config"])
     best = plans[chosen["alias_of"] or chosen["label"]]
@@ -801,9 +1114,13 @@ def tune(program: Program, *, backend: Any = None,
         if chosen_cfg.mesh_placement in mesh_ctx else None)
     best.meta["tuning"] = {
         "chosen": chosen["label"],
+        "objective": objective,
+        "winners": winners,
+        "pareto": pareto,
         "backend": be.name,
         "hw": {k: pricing_hw[k] for k in _HW_KEYS},
         "calibration": calibration,
+        "predictor": predictor,
         "kernel_variants": chosen_cfg.variants_map(),
         "mesh": chosen_mesh,
         "pruned_invalid": sum(

@@ -34,7 +34,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 __all__ = ["KernelVariant", "KERNELS", "kernel_names", "variants_for",
            "default_variant", "validate_variant", "kernel_roofline",
-           "bind_variant"]
+           "kernel_workset", "bind_variant"]
 
 Params = Dict[str, int]
 ParamsKey = Tuple[Tuple[str, int], ...]
@@ -89,6 +89,15 @@ def _flash_validate(shapes, params) -> Optional[Params]:
     return {"block_q": bq, "block_k": bk}
 
 
+def _flash_workset(shapes, itemsizes, params):
+    (B, S, K, G, D) = shapes[0]
+    eb = itemsizes[0]
+    bq, bk = params["block_q"], params["block_k"]
+    # one program instance's VMEM tiles: q + fp32 o/accumulators, the
+    # current k/v tile pair, and the fp32 score tile
+    return float(bq * G * D * (eb + 4) + 2 * bk * D * eb + bq * G * bk * 4)
+
+
 def _flash_roofline(shapes, itemsizes, params):
     (B, S, K, G, D) = shapes[0]
     T = shapes[1][1]
@@ -112,6 +121,15 @@ def _wkv6_validate(shapes, params) -> Optional[Params]:
     if bt is None:
         return None
     return {"block_t": bt}
+
+
+def _wkv6_workset(shapes, itemsizes, params):
+    (B, T, H, hs) = shapes[0]
+    eb = itemsizes[0]
+    L = params["block_t"]
+    # r/k/v/w chunk tiles + u + fp32 running state + fp32 score tile + o
+    return float(4 * L * hs * eb + hs * eb + hs * hs * 4
+                 + L * L * 4 + L * hs * 4)
 
 
 def _wkv6_roofline(shapes, itemsizes, params):
@@ -140,6 +158,13 @@ def _rglru_validate(shapes, params) -> Optional[Params]:
     return {"block_t": bt}
 
 
+def _rglru_workset(shapes, itemsizes, params):
+    (B, T, D) = shapes[0]
+    L = params["block_t"]
+    # a/b chunk tiles in, h chunk out + fp32 carry row, all fp32
+    return float(3 * L * D * 4 + D * 4)
+
+
 def _rglru_roofline(shapes, itemsizes, params):
     (B, T, D) = shapes[0]
     L = params["block_t"]
@@ -166,6 +191,15 @@ def _rmsnorm_validate(shapes, params) -> Optional[Params]:
     return {"block_rows": _rmsnorm_canon_rows(params["block_rows"], n)}
 
 
+def _rmsnorm_workset(shapes, itemsizes, params):
+    x = shapes[0]
+    D = x[-1]
+    eb = itemsizes[0]
+    br = params["block_rows"]
+    # the row tile in/out + the gain vector
+    return float(2 * br * D * eb + D * eb)
+
+
 def _rmsnorm_roofline(shapes, itemsizes, params):
     x = shapes[0]
     D = x[-1]
@@ -184,6 +218,7 @@ KERNELS: Dict[str, dict] = {
         "defaults": {"block_q": 128, "block_k": 128},
         "validate": _flash_validate,
         "roofline": _flash_roofline,
+        "workset": _flash_workset,
     },
     "wkv6": {
         # 128 is deliberately absent: the chunk form divides k by the
@@ -193,18 +228,21 @@ KERNELS: Dict[str, dict] = {
         "defaults": {"block_t": 64},
         "validate": _wkv6_validate,
         "roofline": _wkv6_roofline,
+        "workset": _wkv6_workset,
     },
     "rglru_scan": {
         "grid": {"block_t": (64, 128, 256)},
         "defaults": {"block_t": 256},
         "validate": _rglru_validate,
         "roofline": _rglru_roofline,
+        "workset": _rglru_workset,
     },
     "rmsnorm": {
         "grid": {"block_rows": (64, 128, 256, 512)},
         "defaults": {"block_rows": 256},
         "validate": _rmsnorm_validate,
         "roofline": _rmsnorm_roofline,
+        "workset": _rmsnorm_workset,
     },
 }
 
@@ -255,6 +293,24 @@ def kernel_roofline(kernel: str, params: Params, shapes: Sequence[tuple],
         raise ValueError(
             f"invalid {kernel} tile {dict(params)} for shapes {shapes}")
     return KERNELS[kernel]["roofline"](shapes, tuple(itemsizes), canon)
+
+
+def kernel_workset(kernel: str, params: Params, shapes: Sequence[tuple],
+                   itemsizes: Sequence[int] = ()) -> float:
+    """On-chip working-set bytes of one program instance of ``kernel``
+    launched with ``params`` — the tile buffers a single grid step holds
+    live (ISSUE 10: the kernel-variant term of the plan peak-memory
+    walk, ``repro.core.residency.plan_peak_device_bytes``).  Larger
+    tiles buy roofline time at the price of residency, which is exactly
+    the time × memory trade-off the Pareto tuner surfaces."""
+    shapes = tuple(map(tuple, shapes))
+    if not itemsizes:
+        itemsizes = (4,) * len(shapes)
+    canon = KERNELS[kernel]["validate"](shapes, dict(params))
+    if canon is None:
+        raise ValueError(
+            f"invalid {kernel} tile {dict(params)} for shapes {shapes}")
+    return KERNELS[kernel]["workset"](shapes, tuple(itemsizes), canon)
 
 
 @functools.lru_cache(maxsize=None)

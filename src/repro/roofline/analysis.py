@@ -25,10 +25,13 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["HW", "CALIBRATABLE", "parse_hlo", "collective_bytes",
+__all__ = ["HW", "CALIBRATABLE", "ENERGY_TERMS", "PREDICTOR_FEATURES",
+           "parse_hlo", "collective_bytes",
            "dot_flops", "analytic_model_flops", "analytic_hbm_bytes",
            "roofline_terms", "offload_cost_terms", "kernel_roofline_terms",
-           "fit_offload_constants", "rank_correlation"]
+           "fit_offload_constants", "rank_correlation",
+           "candidate_features", "fit_candidate_predictor",
+           "predict_candidate_s"]
 
 HW = {
     "peak_flops_bf16": 197e12,   # per chip
@@ -41,7 +44,23 @@ HW = {
     "pcie_bw": 16e9,             # bytes/s host<->device
     "launch_overhead_s": 5e-6,   # per physical dispatch
     "sync_overhead_s": 2e-6,     # per wait point
+    # per-byte / per-flop joule constants for the tuner's energy
+    # objective (ISSUE 10, after the OMP2HMPP sequel's energy-performance
+    # exploration): link energy dominates per byte moved over PCIe, HBM
+    # access sits around single-digit pJ/byte, ICI between the two, and
+    # an MXU flop costs a fraction of a pJ at bf16.  Calibratable via
+    # ``hw=`` overrides like the time constants (there is no power meter
+    # in the loop, so they are not part of the least-squares time fit).
+    "pcie_j_per_byte": 2.0e-10,
+    "hbm_j_per_byte": 7.0e-12,
+    "ici_j_per_byte": 2.5e-11,
+    "flop_j": 1.5e-13,
 }
+
+# the energy-model constants (a documented subset of HW; override via
+# ``hw=`` to recalibrate for a different part)
+ENERGY_TERMS = ("pcie_j_per_byte", "hbm_j_per_byte", "ici_j_per_byte",
+                "flop_j")
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -363,7 +382,14 @@ def offload_cost_terms(h2d_bytes: float, d2h_bytes: float,
     collectives GSPMD inserts for a sharded placement
     (``collective_bytes`` over the per-device HLO), priced against the
     inter-chip interconnect beside the PCIe leg; single-device plans
-    leave it 0 and the term vanishes."""
+    leave it 0 and the term vanishes.
+
+    ``energy_j`` (ISSUE 10) estimates the plan's data-movement + compute
+    energy: bytes moved over each link × its per-byte joule constant
+    (``ENERGY_TERMS``) plus flops × ``flop_j`` — the second objective of
+    the tuner's time × energy × memory Pareto frontier.  The ``.get``
+    fallbacks keep partially-specified ``hw`` overrides (the calibration
+    fit only produces time constants) working."""
     h = hw or HW
     transfer_s = (h2d_bytes + d2h_bytes) / h["pcie_bw"]
     dispatch_s = (h["launch_overhead_s"] * dispatches
@@ -371,12 +397,19 @@ def offload_cost_terms(h2d_bytes: float, d2h_bytes: float,
     kernel_s = max(flops / h["peak_flops_bf16"],
                    kernel_bytes / h["hbm_bw"])
     collective_s = coll_bytes / h["ici_bw"]
+    energy_j = (
+        (h2d_bytes + d2h_bytes)
+        * h.get("pcie_j_per_byte", HW["pcie_j_per_byte"])
+        + kernel_bytes * h.get("hbm_j_per_byte", HW["hbm_j_per_byte"])
+        + coll_bytes * h.get("ici_j_per_byte", HW["ici_j_per_byte"])
+        + flops * h.get("flop_j", HW["flop_j"]))
     return {
         "transfer_s": transfer_s,
         "dispatch_s": dispatch_s,
         "kernel_s": kernel_s,
         "collective_s": collective_s,
         "predicted_s": transfer_s + dispatch_s + kernel_s + collective_s,
+        "energy_j": energy_j,
     }
 
 
@@ -563,6 +596,128 @@ def rank_correlation(xs, ys) -> float:
     if sx == 0.0 or sy == 0.0:
         return 0.0
     return float(((rx - rx.mean()) * (ry - ry.mean())).mean() / (sx * sy))
+
+
+# ---------------------------------------------------------------------------
+# Cross-program candidate predictor (ISSUE 10).
+#
+# ``fit_offload_constants`` calibrates the analytic model from ONE
+# program's measured table.  The predictor below generalizes ACROSS
+# programs (the OpenMP-Advisor observation): featurize every measured
+# candidate, fit one linear model on all rows the tunecache accumulated
+# for a device class, and use it to price a never-measured program's
+# grid — a zero-measurement cold start.
+# ---------------------------------------------------------------------------
+
+# per-candidate feature vector: the predict_cost counters, the analytic
+# prior (default-constant predicted seconds — anchors the fit where the
+# training programs carry no signal), and the execution knobs the
+# analytic model cannot see (stream count, fusion, donation).
+PREDICTOR_FEATURES = ("h2d_bytes", "d2h_bytes", "dispatches", "syncs",
+                      "flops", "kernel_bytes", "coll_bytes", "kernel_s",
+                      "analytic_s", "n_streams", "fuse_loops", "donate")
+
+
+def candidate_features(rec) -> Dict[str, float]:
+    """``PREDICTOR_FEATURES`` row for one tuner candidate record (a
+    ``meta["tuning"]["candidates"]`` entry or a cached measured row).
+    The knob features come from the record's ``config`` when present;
+    ``analytic_s`` falls back to ``predicted_s`` for rows priced with
+    default constants."""
+    cfg = rec.get("config") or {}
+    row = {}
+    for f in PREDICTOR_FEATURES:
+        if f == "n_streams":
+            row[f] = float(cfg.get("n_streams", rec.get(f, 1)) or 1)
+        elif f in ("fuse_loops", "donate"):
+            row[f] = 1.0 if (cfg.get(f, rec.get(f)) or 0) else 0.0
+        elif f == "analytic_s":
+            row[f] = float(rec.get("analytic_s",
+                                   rec.get("predicted_s", 0.0)) or 0.0)
+        else:
+            row[f] = float(rec.get(f, 0.0) or 0.0)
+    return row
+
+
+def fit_candidate_predictor(rows, l2: float = 1e-3) -> Optional[Dict]:
+    """Fit the cross-program candidate-time model from measured rows of
+    ≥ 2 distinct programs (each row: ``PREDICTOR_FEATURES`` values +
+    ``measured_s`` + ``program``).  Returns ``{"features", "coef",
+    "intercept", "n_rows", "n_programs"}`` or ``None`` when
+    under-determined.
+
+    Three fit choices matter for rank quality on a held-out program:
+
+    * rows are weighted by 1 / (their program's mean measured time), so
+      the fit minimizes RELATIVE error per program and a large program
+      cannot drown out a small one;
+    * columns are max-abs scaled and ridge-damped (``l2``);
+    * coefficients are constrained non-negative by iterative clipping
+      (fit, drop negative-coefficient features, refit): every feature is
+      a count/size/time whose physical effect is monotone, and an
+      unconstrained fit on few programs happily goes negative on a
+      confounded column and then misranks the held-out grid.
+    """
+    import numpy as np
+    rows = [r for r in rows if r.get("measured_s")]
+    by_prog: Dict[str, List[float]] = {}
+    for r in rows:
+        by_prog.setdefault(str(r.get("program", "")), []).append(
+            float(r["measured_s"]))
+    if len(by_prog) < 2 or len(rows) < 4:
+        return None
+    mean_of = {p: sum(v) / len(v) for p, v in by_prog.items()}
+    w = np.array([1.0 / max(mean_of[str(r.get("program", ""))], 1e-30)
+                  for r in rows])
+    X = np.array([[candidate_features(r)[f] for f in PREDICTOR_FEATURES]
+                  for r in rows], float)
+    y = np.array([float(r["measured_s"]) for r in rows])
+    Xw = X * w[:, None]
+    yw = y * w
+    scale = np.abs(Xw).max(axis=0)
+    scale[scale == 0] = 1.0
+    Xs = Xw / scale
+    active = [i for i in range(len(PREDICTOR_FEATURES)) if X[:, i].any()]
+    coef = None
+    while active:
+        # fewer rows than columns is fine: the ridge rows below make the
+        # stacked system full column rank, damping unsupported
+        # coefficients toward 0, and the caller's rank-correlation
+        # acceptance gate rejects a fit that still misranks
+        A = np.column_stack([Xs[:, active], w])      # last col: intercept
+        reg = np.sqrt(l2) * np.eye(A.shape[1])
+        reg[-1, -1] = 0.0                            # intercept unpenalized
+        try:
+            coef, *_ = np.linalg.lstsq(
+                np.vstack([A, reg]),
+                np.concatenate([yw, np.zeros(A.shape[1])]), rcond=None)
+        except np.linalg.LinAlgError:
+            return None
+        neg = {active[j] for j in range(len(active)) if coef[j] < 0}
+        if not neg:
+            break
+        active = [i for i in active if i not in neg]
+    if not active or coef is None:
+        return None
+    return {
+        "features": list(PREDICTOR_FEATURES),
+        "coef": {PREDICTOR_FEATURES[i]: float(coef[j] / scale[i])
+                 for j, i in enumerate(active)},
+        "intercept": float(coef[-1]),
+        "n_rows": len(rows),
+        "n_programs": len(by_prog),
+    }
+
+
+def predict_candidate_s(model: Dict, rec) -> float:
+    """Price one candidate with a ``fit_candidate_predictor`` model
+    (clamped at 0 — a learned intercept must not go negative on a tiny
+    program)."""
+    row = candidate_features(rec)
+    s = float(model.get("intercept", 0.0))
+    for f, c in model.get("coef", {}).items():
+        s += float(c) * row.get(f, 0.0)
+    return max(s, 0.0)
 
 
 def roofline_terms(cfg, shape, n_devices: int, hlo_text: str, *,

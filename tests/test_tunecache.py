@@ -28,7 +28,7 @@ import pytest
 
 from repro.core import (COST_MODEL_VERSION, JaxDeviceBackend,
                         NumpyHostBackend, Program, TuneCache,
-                        backend_fingerprint, get_backend, plan,
+                        device_class_key, get_backend, plan,
                         program_fingerprint, tune)
 from repro.core import tunecache as tunecache_mod
 from repro.polybench import build, build_3mm
@@ -122,14 +122,20 @@ class TestInvalidation:
             p.set_outputs("o")
             return p
 
+        def tuning_slots(tc):
+            # the measured-table slots only: a measured run also writes
+            # the per-device-class store (rows/calibration/predictor)
+            return [f for f in tc.path.glob("*.json")
+                    if not f.name.startswith("devclass--")]
+
         tc = TuneCache(tmp_path / "edit")
         tune(make(2.0), backend="numpy", reps=1, cache=tc)
-        assert len(list(tc.path.glob("*.json"))) == 1
+        assert len(tuning_slots(tc)) == 1
         pl = tune(make(3.0), backend="numpy", reps=1, cache=tc)
         assert pl.meta["tuning_cache"]["hit"] is False
         assert pl.meta["tuning_cache"]["measurements"] > 0
         # the slot was overwritten, not duplicated
-        assert len(list(tc.path.glob("*.json"))) == 1
+        assert len(tuning_slots(tc)) == 1
 
     def test_closure_captured_array_resize_invalidates(self):
         """A block body capturing an array (instead of binding it as an
@@ -449,13 +455,14 @@ class TestCalibration:
             rank_correlation([1, 2], [1])
 
     def test_fitted_constants_priced_into_next_program(self, tmp_path):
-        """Constants stored for a backend price the NEXT tune call on
-        that backend (the OpenMP-Advisor loop: measure → fit → predict)."""
+        """Constants stored for a device class price the NEXT tune call
+        on that device (the OpenMP-Advisor loop: measure → fit →
+        predict)."""
         tc = TuneCache(tmp_path / "cal")
         be = get_backend("numpy")
         fitted = {"pcie_bw": 123e9, "launch_overhead_s": 7e-5,
                   "sync_overhead_s": 3e-6}
-        tc.store_calibration(backend_fingerprint(be), HW, fitted)
+        tc.store_calibration(device_class_key(be), HW, fitted)
         p, _ = build_3mm(n=16)
         pl = tune(p, backend="numpy", reps=1, cache=tc)
         assert pl.meta["tuning"]["hw"]["pcie_bw"] == 123e9
@@ -465,14 +472,28 @@ class TestCalibration:
                    use_calibration=False)
         assert pl2.meta["tuning"]["hw"]["pcie_bw"] == HW["pcie_bw"]
 
+    def test_calibration_shared_per_device_class(self):
+        """The carried-over PR 5/6 bug: constants were keyed per BACKEND
+        fingerprint, so the same silicon fitted (and read) different
+        constants at each stream count / donation flag.  The device-class
+        key deliberately drops those knobs — every twin of one device
+        reads one store."""
+        base = get_backend("numpy")
+        twins = [base.variant(n_streams=s) for s in (1, 3, 4)]
+        keys = {device_class_key(b) for b in (base, *twins)}
+        assert len(keys) == 1
+        # while genuinely different devices do not alias
+        assert device_class_key(base) != device_class_key(
+            get_backend("pinned"))
+
     def test_calibration_version_keyed(self, tmp_path, monkeypatch):
         tc = TuneCache(tmp_path / "calv")
-        be_key = backend_fingerprint(get_backend("numpy"))
-        tc.store_calibration(be_key, HW, {"pcie_bw": 9e9})
-        assert tc.load_calibration(be_key, HW) == {"pcie_bw": 9e9}
+        dc_key = device_class_key(get_backend("numpy"))
+        tc.store_calibration(dc_key, HW, {"pcie_bw": 9e9})
+        assert tc.load_calibration(dc_key, HW) == {"pcie_bw": 9e9}
         monkeypatch.setattr(tunecache_mod, "COST_MODEL_VERSION",
                             COST_MODEL_VERSION + 1000)
-        assert tc.load_calibration(be_key, HW) is None
+        assert tc.load_calibration(dc_key, HW) is None
 
     def test_live_run_records_calibration(self):
         """A measured tune records the fit verdict: row count, both
